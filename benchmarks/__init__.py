@@ -1,0 +1,1 @@
+# Benchmark battery -- see run.py

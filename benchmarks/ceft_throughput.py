@@ -1,0 +1,85 @@
+"""CEFT scheduler throughput (paper §5 complexity + our §Perf hillclimb).
+
+Three implementations of the same algorithm:
+  reference : Algorithm 1 verbatim (4 nested Python loops)  -- paper-faithful
+  vectorized: per-task dense (parents x P x P) contraction   -- numpy
+  jax       : level-batched lax.scan sweep (jit, the TPU formulation)
+plus the batched-machines form (vmap over 8 machines -- the online
+re-planning shape from repro.sched.straggler).
+
+Empirical complexity fit: times regressed against P^2 * e (the paper's
+O(P^2 e) claim).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ceft, ceft_reference
+from repro.core.ceft_jax import _sweep, ceft_jax, ceft_jax_batch, device_inputs
+from repro.graphs import rgg
+
+from .common import CSV, scale, timed
+
+
+def run(seed: int = 5):
+    csv = CSV(["bench", "n_tasks", "P", "edges", "impl", "ms_per_graph",
+               "graphs_per_s", "speedup_vs_reference"])
+    rng = np.random.default_rng(seed)
+    sizes = [(256, 4), (256, 16), (1024, 16), (1024, 64), (4096, 16)]
+    if scale() >= 1.0:
+        sizes.append((16384, 64))  # the paper's largest graphs
+    fits = []
+    for n, P in sizes:
+        wl = rgg("high", n, P, rng, o=4, alpha=0.75, beta=50)
+        g, comp, m = wl.graph, wl.comp, wl.machine
+        e = g.n_edges
+
+        if n <= 1024:  # the reference is O(minutes) beyond this
+            _, t_ref = timed(lambda: ceft_reference(g, comp, m), reps=1)
+        else:
+            t_ref = float("nan")
+        _, t_vec = timed(lambda: ceft(g, comp, m), reps=2)
+
+        # jax: separate compile from steady-state
+        tables, comp_pad, L, bw = device_inputs(g, comp, m)
+        out = _sweep(tables, comp_pad, L, bw)  # compile
+        out[0].block_until_ready()
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            out = _sweep(tables, comp_pad, L, bw)
+        out[0].block_until_ready()
+        t_jax = (time.perf_counter() - t0) / reps
+
+        # batched machines (vmap) -- 8 re-planning scenarios at once
+        B = 8
+        comps = np.repeat(comp[None], B, 0)
+        Ls = np.repeat(np.asarray(m.L, np.float32)[None], B, 0)
+        bws = np.repeat(np.asarray(m.bw, np.float32)[None], B, 0)
+        outb = ceft_jax_batch(g, comps, Ls, bws)  # compile
+        outb[0].block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            outb = ceft_jax_batch(g, comps, Ls, bws)
+        outb[0].block_until_ready()
+        t_batch = (time.perf_counter() - t0) / 3 / B
+
+        for impl, t in [("reference", t_ref), ("vectorized", t_vec),
+                        ("jax", t_jax), ("jax_vmap8", t_batch)]:
+            csv.row("ceft_throughput", n, P, e, impl, f"{t * 1e3:.2f}",
+                    f"{1.0 / t:.1f}" if t == t else "nan",
+                    f"{t_ref / t:.1f}" if t == t and t_ref == t_ref else "nan")
+        fits.append((P * P * e, t_vec))
+
+    # O(P^2 e) scaling fit on the vectorized impl
+    x = np.log(np.asarray([f[0] for f in fits], float))
+    y = np.log(np.asarray([f[1] for f in fits], float))
+    slope = float(np.polyfit(x, y, 1)[0])
+    csv.row("ceft_complexity_fit", "-", "-", "-", "log-log slope vs P^2*e",
+            f"{slope:.3f}", "expect ~<= 1", "-")
+
+
+if __name__ == "__main__":
+    run()

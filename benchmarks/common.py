@@ -1,0 +1,102 @@
+"""Shared benchmark harness: experiment sampling over the paper's parameter
+grids, the per-experiment algorithm battery, CSV emission."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (
+    ceft,
+    ceft_cpop,
+    ceft_heft_down,
+    ceft_heft_up,
+    cpop,
+    heft,
+    slack,
+    slr,
+    speedup,
+)
+from repro.core.cpop import cpop_cpl
+from repro.graphs import rgg
+
+# the paper's §7.1 grids (sampled rather than exhausted: 345600 experiments
+# do not fit a CI box; sizes are scaled by REPRO_BENCH_SCALE)
+GRID = {
+    "n": [64, 128, 256, 512],
+    "P": [2, 4, 8, 16, 32],
+    "o": [2, 4, 8],
+    "c": [0.001, 0.01, 0.1, 1, 5, 10],
+    "alpha": [0.1, 0.25, 0.75, 1.0],
+    "beta": [10, 25, 50, 75, 95],
+    "gamma": [0.1, 0.25, 0.5, 0.75, 0.95],
+}
+
+WORKLOADS = ["classic", "low", "medium", "high"]
+
+
+def scale() -> float:
+    return float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+
+
+def sample_params(rng: np.random.Generator) -> dict:
+    return {k: (rng.choice(v) if k != "n" else int(rng.choice(v)))
+            for k, v in GRID.items()}
+
+
+def make_experiment(kind: str, rng: np.random.Generator, **overrides):
+    p = sample_params(rng)
+    p.update(overrides)
+    wl = rgg(kind, int(p["n"]), int(p["P"]), rng, o=float(p["o"]), c=float(p["c"]),
+             alpha=float(p["alpha"]), beta=float(p["beta"]), gamma=float(p["gamma"]))
+    return wl, p
+
+
+def run_algos(wl, algos=("ceft_cpop", "cpop", "heft")) -> dict:
+    """Returns per-algorithm schedules + CPLs + metrics for one experiment."""
+    g, comp, m = wl.graph, wl.comp, wl.machine
+    out: dict = {}
+    res = ceft(g, comp, m)
+    out["ceft_cpl"] = res.cpl
+    out["cpop_cpl"] = cpop_cpl(g, comp, m)
+    fns = {"ceft_cpop": lambda: ceft_cpop(g, comp, m, res), "cpop": lambda: cpop(g, comp, m),
+           "heft": lambda: heft(g, comp, m), "ceft_heft_up": lambda: ceft_heft_up(g, comp, m),
+           "ceft_heft_down": lambda: ceft_heft_down(g, comp, m)}
+    for name in algos:
+        s = fns[name]()
+        out[name] = {
+            "makespan": s.makespan,
+            "speedup": speedup(s, comp, m),
+            "slr": slr(s, g, comp),
+            "slack": slack(s, g, comp, m),
+        }
+    return out
+
+
+def cat3(a: float, b: float, rel: float = 1e-6) -> int:
+    """0 longer / 1 equal / 2 shorter (a vs b)."""
+    if a > b * (1 + rel):
+        return 0
+    if a < b * (1 - rel):
+        return 2
+    return 1
+
+
+class CSV:
+    def __init__(self, header: list[str]):
+        self.header = header
+        print(",".join(header), flush=True)
+
+    def row(self, *vals):
+        print(",".join(str(v) for v in vals), flush=True)
+
+
+def timed(fn, *args, reps=3):
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return out, best

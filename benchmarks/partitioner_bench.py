@@ -1,0 +1,57 @@
+"""Beyond-paper benchmark: CEFT as the runtime's pipeline partitioner on the
+ten assigned architectures (layer DAGs x heterogeneous fleets), nominal and
+degraded (straggler) scenarios."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.configs as C
+from repro.configs.base import SHAPES
+from repro.core import ceft, ceft_cpop, cpop, heft
+from repro.sched import DEFAULT_FLEET, DeviceClass, build_layer_dag, plan_pipeline
+
+from .common import CSV
+
+CONSTRAINED = [
+    DeviceClass("v5e-96", 96 * 197e12, 96 * 819e9, 50e9, 2),
+    DeviceClass("v5p-32", 32 * 459e12, 32 * 2765e9, 90e9, 2),
+    DeviceClass("v5e-48-degraded", 48 * 197e12, 48 * 819e9, 25e9, 2),
+    DeviceClass("host-cpu", 3e12, 100e9, 12.5e9, 4),
+]
+
+
+def run():
+    csv = CSV(["bench", "arch", "cell", "fleet", "cpl_ms", "ceft_cpop_ms",
+               "cpop_ms", "heft_ms", "vs_cpop", "plan_ms"])
+    for arch in C.ARCHS:
+        cfg = C.get(arch)
+        for cell_name in ("train_4k", "decode_32k"):
+            cell = SHAPES[cell_name]
+            for fleet_name, fleet in (("default", None), ("constrained", CONSTRAINED)):
+                t0 = time.perf_counter()
+                plan = plan_pipeline(cfg, cell, fleet=fleet)
+                dt = time.perf_counter() - t0
+                csv.row("partitioner", arch, cell_name, fleet_name,
+                        f"{plan.cpl * 1e3:.3f}", f"{plan.makespan * 1e3:.3f}",
+                        f"{plan.makespan_cpop * 1e3:.3f}",
+                        f"{plan.makespan_heft * 1e3:.3f}",
+                        f"{plan.speedup_vs_cpop:.3f}", f"{dt * 1e3:.1f}")
+
+    # straggler scenario: degrade each class 3x in turn (glm4 train DAG)
+    g, comp, m, _ = build_layer_dag(C.get("glm4-9b"), SHAPES["train_4k"])
+    base = ceft_cpop(g, comp, m, ceft(g, comp, m)).makespan
+    for cls in range(m.P):
+        degraded = comp.copy()
+        degraded[:, cls] *= 3.0
+        ours = ceft_cpop(g, degraded, m, ceft(g, degraded, m)).makespan
+        cp = cpop(g, degraded, m).makespan
+        hf = heft(g, degraded, m).makespan
+        csv.row("straggler_replan", "glm4-9b", "train_4k", f"class{cls}x3",
+                "-", f"{ours * 1e3:.3f}", f"{cp * 1e3:.3f}", f"{hf * 1e3:.3f}",
+                f"{cp / ours:.3f}", f"{base * 1e3:.3f}")
+
+
+if __name__ == "__main__":
+    run()

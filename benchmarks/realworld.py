@@ -1,0 +1,55 @@
+"""Paper Figs 15-18: SLR and speedup vs CCR on the four real-world DAGs
+(FFT, GE, MD, EW), classic and medium weight variants."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs import epigenomics, fft_graph, gaussian_elimination, molecular_dynamics
+from repro.graphs.rgg import classic_workload, interval_workload
+
+from .common import CSV, cat3, run_algos, scale
+
+GRAPHS = {
+    "FFT": lambda: fft_graph(32),
+    "GE": lambda: gaussian_elimination(12),
+    "MD": molecular_dynamics,
+    "EW": lambda: epigenomics(12),
+}
+CCRS = [0.001, 0.01, 0.1, 0.5, 1, 5, 10]
+BETAS = [10, 25, 50, 75, 95]
+
+
+def run(n_rep: int = 10, seed: int = 13):
+    n_rep = max(3, int(n_rep * scale()))
+    csv = CSV(["figure", "app", "variant", "ccr", "algo", "metric", "mean"])
+    rng = np.random.default_rng(seed)
+    counts = {"classic": np.zeros(3, int), "medium": np.zeros(3, int)}
+    for app, make in GRAPHS.items():
+        g = make()
+        for variant in ("classic", "medium"):
+            for c in CCRS:
+                acc: dict = {}
+                for _ in range(n_rep):
+                    P = int(rng.choice([4, 8, 16]))
+                    beta = float(rng.choice(BETAS))
+                    if variant == "classic":
+                        wl = classic_workload(g, P, c, beta, rng)
+                    else:
+                        wl = interval_workload(g, P, c, beta, "medium", rng)
+                    r = run_algos(wl)
+                    counts[variant][cat3(r["ceft_cpl"], r["cpop_cpl"])] += 1
+                    for a in ("ceft_cpop", "cpop", "heft"):
+                        for metric in ("slr", "speedup"):
+                            acc.setdefault((a, metric), []).append(r[a][metric])
+                for (a, metric), vals in acc.items():
+                    csv.row("fig15_18_realworld", app, variant, c, a, metric,
+                            f"{np.mean(vals):.4f}")
+    for variant, cats in counts.items():
+        pct = 100 * cats / max(cats.sum(), 1)
+        csv.row("realworld_cpl_pct", "ALL", variant, "-", "ceft_vs_cpop",
+                "longer/equal/shorter",
+                f"{pct[0]:.1f}/{pct[1]:.1f}/{pct[2]:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Benchmark battery: one module per paper table/figure (+ beyond-paper
+benches).  Each prints CSV to stdout; `python -m benchmarks.run` runs all.
+
+  REPRO_BENCH_SCALE=0.25 python -m benchmarks.run     # quick pass
+  python -m benchmarks.run --only table3 sweeps       # subset
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    from . import (ceft_throughput, kernel_bench, partitioner_bench,
+                   realworld, sweeps, table3)
+    suites = {
+        "table3": table3.run,                      # Table 3 + Figs 5-6
+        "sweeps": sweeps.run,                      # Figs 10-14
+        "ranks": lambda: sweeps.run(ranks=True, n_rep=6),   # Figs 19-20 (§8.2)
+        "realworld": realworld.run,                # Figs 15-18
+        "ceft_throughput": ceft_throughput.run,    # §5 complexity / §Perf
+        "kernel": kernel_bench.run,                # kernel layer
+        "partitioner": partitioner_bench.run,      # beyond-paper
+    }
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=list(suites))
+    args = ap.parse_args()
+    names = args.only or list(suites)
+    for name in names:
+        print(f"\n# ==== {name} ====", flush=True)
+        t0 = time.time()
+        suites[name]()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

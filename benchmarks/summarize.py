@@ -1,0 +1,81 @@
+"""Summarize bench_output.txt CSV into the paper's figures as markdown tables.
+
+  PYTHONPATH=src python -m benchmarks.summarize bench_output.txt [--fig fig10]
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import sys
+
+
+def load(path: str):
+    rows = []
+    for line in open(path):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        rows.append(line.split(","))
+    return rows
+
+
+def fig_table(rows, figure: str, metric: str, workloads=None):
+    """Pivot: rows = sweep value, columns = algorithm, cells = mean metric."""
+    data = collections.defaultdict(dict)
+    algos = []
+    param = None
+    for r in rows:
+        if len(r) < 7 or r[0] != figure or r[5] != metric:
+            continue
+        _, kind, param, value, algo, _, mean = r[:7]
+        if workloads and kind not in workloads:
+            continue
+        key = (kind, value)
+        data[key][algo] = float(mean)
+        if algo not in algos:
+            algos.append(algo)
+    if not data:
+        return f"(no rows for {figure}/{metric})"
+    out = [f"**{figure} — mean {metric}**", ""]
+    out.append("| workload | " + (param or "x") + " | " + " | ".join(algos) + " |")
+    out.append("|---" * (len(algos) + 2) + "|")
+    for (kind, value), per in data.items():
+        cells = [f"{per.get(a, float('nan')):.3f}" for a in algos]
+        out.append(f"| {kind} | {value} | " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+def table3(rows):
+    out = ["**Table 3 — CEFT(-CPOP) vs CPOP, longer/equal/shorter %**", "",
+           "| workload | quantity | longer | equal | shorter |",
+           "|---|---|---|---|---|"]
+    for r in rows:
+        if r[0] == "table3":
+            out.append(f"| {r[1]} | {r[2]} | {r[3]} | {r[4]} | {r[5]} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("csv", nargs="?", default="bench_output.txt")
+    ap.add_argument("--fig", default=None)
+    args = ap.parse_args()
+    rows = load(args.csv)
+    sections = [table3(rows)]
+    for figure, metric, wl in [
+        ("fig10_speedup_vs_P", "speedup", None),
+        ("fig11_12_vs_beta", "slr", ("medium", "high")),
+        ("fig11_12_vs_beta", "speedup", ("medium", "high")),
+        ("fig13_19_20_vs_alpha", "slr", None),
+        ("fig13_vs_ccr", "slr", None),
+        ("fig13_vs_ccr", "slack", None),
+        ("fig14_vs_tasks", "slr", None),
+    ]:
+        if args.fig and not figure.startswith(args.fig):
+            continue
+        sections.append(fig_table(rows, figure, metric, wl))
+    print("\n\n".join(sections))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper figure sweeps:
+
+  fig10/12/19: mean speedup vs #processors / beta / alpha (per algorithm)
+  fig11/13/14/20: mean SLR vs beta / alpha / CCR / #tasks
+  fig13c: mean slack vs CCR
+  --ranks adds the CEFT-HEFT-UP/DOWN variants (paper §8.2)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import CSV, WORKLOADS, make_experiment, run_algos, scale
+
+BASE_ALGOS = ("ceft_cpop", "cpop", "heft")
+RANK_ALGOS = BASE_ALGOS + ("ceft_heft_up", "ceft_heft_down")
+
+
+def _sweep(csv: CSV, fig: str, kind: str, param: str, values, rng, n_rep, algos):
+    for val in values:
+        acc: dict[str, dict[str, list[float]]] = {a: {} for a in algos}
+        for _ in range(n_rep):
+            wl, _ = make_experiment(kind, rng, **{param: val})
+            r = run_algos(wl, algos=algos)
+            for a in algos:
+                for metric in ("speedup", "slr", "slack", "makespan"):
+                    acc[a].setdefault(metric, []).append(r[a][metric])
+        for a in algos:
+            for metric in ("speedup", "slr", "slack"):
+                csv.row(fig, kind, param, val, a, metric,
+                        f"{np.mean(acc[a][metric]):.4f}")
+
+
+def run(n_rep: int = 12, seed: int = 11, ranks: bool = False):
+    n_rep = max(3, int(n_rep * scale()))
+    algos = RANK_ALGOS if ranks else BASE_ALGOS
+    csv = CSV(["figure", "workload", "param", "value", "algo", "metric", "mean"])
+    rng = np.random.default_rng(seed)
+    # fig 10: speedup vs number of processors (all four workloads)
+    for kind in WORKLOADS:
+        _sweep(csv, "fig10_speedup_vs_P", kind, "P", [2, 4, 8, 16, 32], rng, n_rep, algos)
+    # figs 11/12: SLR & speedup vs beta (heterogeneity)
+    for kind in WORKLOADS:
+        _sweep(csv, "fig11_12_vs_beta", kind, "beta", [10, 25, 50, 75, 95], rng, n_rep, algos)
+    # figs 13a/19/20: vs alpha (graph width)
+    for kind in ("classic", "high"):
+        _sweep(csv, "fig13_19_20_vs_alpha", kind, "alpha", [0.1, 0.25, 0.75, 1.0], rng, n_rep, algos)
+    # figs 13b/13c: vs CCR
+    for kind in ("classic", "high"):
+        _sweep(csv, "fig13_vs_ccr", kind, "c", [0.01, 0.1, 1, 5, 10], rng, n_rep, algos)
+    # fig 14: vs number of tasks
+    for kind in ("classic", "high"):
+        _sweep(csv, "fig14_vs_tasks", kind, "n", [64, 128, 256, 512], rng, n_rep, algos)
+
+
+if __name__ == "__main__":
+    run()

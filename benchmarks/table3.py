@@ -1,0 +1,30 @@
+"""Paper Table 3 + Figs 5-6: % of experiments where CEFT's CPL / CEFT-CPOP's
+makespan is longer / equal / shorter than CPOP's, per workload family."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import CSV, WORKLOADS, cat3, make_experiment, run_algos, scale
+
+
+def run(n_experiments: int = 160, seed: int = 7):
+    n_experiments = max(8, int(n_experiments * scale()))
+    csv = CSV(["table", "workload", "quantity", "longer_pct", "equal_pct",
+               "shorter_pct", "n_experiments"])
+    rng = np.random.default_rng(seed)
+    for kind in WORKLOADS:
+        cpl_cat = np.zeros(3, int)
+        mk_cat = np.zeros(3, int)
+        for _ in range(n_experiments):
+            wl, _ = make_experiment(kind, rng)
+            r = run_algos(wl, algos=("ceft_cpop", "cpop"))
+            cpl_cat[cat3(r["ceft_cpl"], r["cpop_cpl"])] += 1
+            mk_cat[cat3(r["ceft_cpop"]["makespan"], r["cpop"]["makespan"])] += 1
+        for qty, cats in (("CPL", cpl_cat), ("makespan", mk_cat)):
+            pct = 100 * cats / cats.sum()
+            csv.row("table3", kind, qty, f"{pct[0]:.2f}", f"{pct[1]:.2f}",
+                    f"{pct[2]:.2f}", cats.sum())
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Serve a small model with batched requests: prefill once, decode greedily
+with per-sequence EOS, including an SWA (ring-buffer KV cache) variant.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import dataclasses
+import time
+
+import numpy as np
+
+import repro.configs as C
+from repro.configs.base import ArchConfig
+from repro.serve import Engine, ServeConfig
+
+# small dense model (trained weights would come from checkpoint.restore)
+CFG = ArchConfig(
+    name="demo-serve", family="dense",
+    n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, d_ff=512,
+    vocab=4096, head_dim=32, remat="none",
+)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    eng = Engine(CFG)
+    prompts = rng.integers(2, CFG.vocab, (8, 16)).astype(np.int32)
+    t0 = time.time()
+    out = eng.generate(prompts, ServeConfig(max_new_tokens=24, eos_id=1))
+    dt = time.time() - t0
+    new = out.shape[1] - prompts.shape[1]
+    print(f"batched decode: {out.shape[0]} seqs x {new} new tokens "
+          f"in {dt:.2f}s ({out.shape[0] * new / dt:.0f} tok/s incl. compile)")
+    print("sample:", out[0, :24].tolist())
+
+    # sliding-window variant (mixtral-style ring cache, window < prompt)
+    swa = dataclasses.replace(C.get("mixtral-8x22b", smoke=True), window=8)
+    eng2 = Engine(swa)
+    out2 = eng2.generate(prompts[:2, :12], ServeConfig(max_new_tokens=8, eos_id=1))
+    print("SWA ring-cache decode ok:", out2.shape)
+
+    # SSM (mamba2) O(1)-state variant
+    eng3 = Engine(C.get("mamba2-2.7b", smoke=True))
+    out3 = eng3.generate(prompts[:2, :12] % 256, ServeConfig(max_new_tokens=8, eos_id=1))
+    print("SSM state decode ok:", out3.shape)
+
+
+if __name__ == "__main__":
+    main()

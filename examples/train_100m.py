@@ -1,0 +1,54 @@
+"""End-to-end driver: train a ~100M-parameter GQA decoder for a few hundred
+steps on the local device mesh, with checkpointing, WSD schedule, straggler
+monitoring, and a simulated mid-run node failure + recovery.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+import argparse
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch.mesh import make_test_mesh
+from repro.train import Trainer, TrainerConfig
+
+# ~100M params: 12L x 768d (GPT-2-small-ish, llama-style blocks)
+CFG_100M = ArchConfig(
+    name="demo-100m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=2048,
+    vocab=32768, head_dim=64, schedule="wsd", remat="none", loss_chunk=128,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m_ckpt")
+    ap.add_argument("--fail-at", type=int, default=0,
+                    help="simulate a node failure at this step")
+    args = ap.parse_args()
+
+    cell = ShapeCell("train_demo", seq_len=args.seq, global_batch=args.batch,
+                     kind="train")
+    tcfg = TrainerConfig(
+        steps=args.steps, ckpt_every=50, ckpt_dir=args.ckpt,
+        log_every=10, peak_lr=3e-4,
+        fail_at_steps=(args.fail_at,) if args.fail_at else (),
+    )
+    n = CFG_100M.n_params()
+    print(f"model: {n/1e6:.1f}M params, {args.steps} steps, "
+          f"{args.batch}x{args.seq} tokens/step")
+    tr = Trainer(CFG_100M, cell, tcfg, make_test_mesh)
+    metrics = tr.run()
+    losses = [m for m in metrics if "loss" in m]
+    events = [m for m in metrics if "event" in m]
+    print(f"\nstep {losses[0]['step']:4d}  loss {losses[0]['loss']:.4f}")
+    print(f"step {losses[-1]['step']:4d}  loss {losses[-1]['loss']:.4f}")
+    for e in events:
+        print("event:", e)
+    assert losses[-1]["loss"] < losses[0]["loss"], "loss did not improve"
+    print("OK: loss improved; checkpoints in", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — CEFT (heterogeneous critical paths) as the scheduling brain of a
+multi-pod JAX training/serving framework.  See DESIGN.md."""
+__version__ = "1.0.0"

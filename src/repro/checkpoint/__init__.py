@@ -1,0 +1,2 @@
+from .checkpointer import available_steps, latest_valid, restore, save
+__all__ = ["available_steps", "latest_valid", "restore", "save"]

@@ -1,0 +1,128 @@
+"""Level-vectorized CEFT in JAX (the TPU-native reformulation; DESIGN.md §2).
+
+The paper's Algorithm 1 is a 4-deep scalar loop.  On TPU we sweep the DAG one
+*topological level* at a time: a whole level's relaxation
+
+    cand[w, k, l, j] = CEFT[par[w,k], l] + comm(l, j | data[w,k])
+    CEFT[task_w, j]  = comp[task_w, j] + max_k min_l cand[w, k, l, j]
+
+is a dense, batched max-min-plus contraction (a tropical matmul) -- exactly the
+shape the MXU/VPU wants.  ``lax.scan`` runs over fixed-size padded level tables
+so the whole sweep jits once per table shape; predecessor argmin/argmax indices
+are carried so the host can backtrack the path + partial assignment.
+
+``relax_fn`` plugs in the Pallas kernel (repro.kernels.ceft_relax) in place of
+the XLA contraction; both compute identical values (tests assert this).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ceft import CeftResult, _finalize
+from .machine import Machine
+from .taskgraph import TaskGraph, padded_level_tables
+
+NEG = jnp.float32(-3.4e38)
+
+
+def xla_relax(pv, pdata, validp, L, bw):
+    """Reference relaxation in pure XLA.
+
+    pv: (W, D, P) parent CEFT values; pdata: (W, D); validp: (W, D) bool;
+    L: (P,), bw: (P, P).  Returns (maxk (W,P), argk (W,P), argl_sel (W,P)).
+    """
+    P = L.shape[0]
+    off = 1.0 - jnp.eye(P, dtype=pv.dtype)
+    comm = (L[:, None] + pdata[..., None, None] / bw) * off       # (W,D,P,P)
+    cand = pv[..., :, None] + comm                                 # (W,D,Pl,Pj)
+    argl = jnp.argmin(cand, axis=2).astype(jnp.int32)              # (W,D,Pj)
+    minl = jnp.min(cand, axis=2)                                   # (W,D,Pj)
+    minl = jnp.where(validp[..., None], minl, NEG)
+    argk = jnp.argmax(minl, axis=1).astype(jnp.int32)              # (W,Pj)
+    maxk = jnp.max(minl, axis=1)                                   # (W,Pj)
+    argl_sel = jnp.take_along_axis(argl, argk[:, None, :], axis=1)[:, 0, :]
+    return maxk, argk, argl_sel
+
+
+@functools.partial(jax.jit, static_argnames=("relax",))
+def _sweep(tables, comp_pad, L, bw, relax: Callable = xla_relax):
+    v = comp_pad.shape[0] - 1  # last row is the padding scratch slot
+    P = comp_pad.shape[1]
+
+    def body(carry, xs):
+        ceft_arr, ptask, pproc = carry
+        tasks, par, pdata = xs
+        validt = tasks >= 0
+        tt = jnp.where(validt, tasks, v)
+        validp = par >= 0
+        pp = jnp.where(validp, par, v)
+        pv = ceft_arr[pp]                                          # (W,D,P)
+        maxk, argk, argl_sel = relax(pv, pdata, validp, L, bw)
+        has_par = validp.any(axis=1)
+        relaxed = jnp.where(has_par[:, None], maxk, 0.0)
+        newv = comp_pad[tt] + relaxed
+        pt = jnp.take_along_axis(pp, argk, axis=1)                 # (W,P)
+        pt = jnp.where(has_par[:, None], pt, -1)
+        pl = jnp.where(has_par[:, None], argl_sel, -1)
+        keep = validt[:, None]
+        ceft_arr = ceft_arr.at[tt].set(jnp.where(keep, newv, ceft_arr[tt]))
+        ptask = ptask.at[tt].set(jnp.where(keep, pt, ptask[tt]))
+        pproc = pproc.at[tt].set(jnp.where(keep, pl, pproc[tt]))
+        return (ceft_arr, ptask, pproc), None
+
+    init = (
+        jnp.zeros((v + 1, P), comp_pad.dtype),
+        jnp.full((v + 1, P), -1, jnp.int32),
+        jnp.full((v + 1, P), -1, jnp.int32),
+    )
+    (ceft_arr, ptask, pproc), _ = jax.lax.scan(body, init, tables)
+    return ceft_arr[:v], ptask[:v], pproc[:v]
+
+
+def device_inputs(g: TaskGraph, comp: np.ndarray, m: Machine, dtype=jnp.float32):
+    t = padded_level_tables(g)
+    tables = (
+        jnp.asarray(t["tasks"]),
+        jnp.asarray(t["par"]),
+        jnp.asarray(t["pdata"], dtype),
+    )
+    comp_pad = jnp.concatenate(
+        [jnp.asarray(comp, dtype), jnp.zeros((1, comp.shape[1]), dtype)], axis=0
+    )
+    return tables, comp_pad, jnp.asarray(m.L, dtype), jnp.asarray(m.bw, dtype)
+
+
+def ceft_jax(
+    g: TaskGraph, comp: np.ndarray, m: Machine, *, relax: Callable = xla_relax
+) -> CeftResult:
+    tables, comp_pad, L, bw = device_inputs(g, comp, m)
+    ceft_arr, ptask, pproc = _sweep(tables, comp_pad, L, bw, relax=relax)
+    return _finalize(
+        g,
+        np.asarray(ceft_arr, np.float64),
+        np.asarray(ptask),
+        np.asarray(pproc),
+    )
+
+
+def ceft_jax_batch(g: TaskGraph, comps: np.ndarray, Ls: np.ndarray, bws: np.ndarray):
+    """vmap over machines that share P (batched re-planning / straggler sweeps).
+
+    comps: (B, v, P); Ls: (B, P); bws: (B, P, P).  Returns the (B, v, P) CEFT
+    arrays and predecessor tables (device arrays).
+    """
+    t = padded_level_tables(g)
+    tables = (
+        jnp.asarray(t["tasks"]),
+        jnp.asarray(t["par"]),
+        jnp.asarray(t["pdata"], jnp.float32),
+    )
+    pad = jnp.zeros((comps.shape[0], 1, comps.shape[2]), jnp.float32)
+    comp_pad = jnp.concatenate([jnp.asarray(comps, jnp.float32), pad], axis=1)
+    fn = jax.vmap(lambda c, L, b: _sweep(tables, c, L, b))
+    return fn(comp_pad, jnp.asarray(Ls, jnp.float32), jnp.asarray(bws, jnp.float32))

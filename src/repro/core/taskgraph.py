@@ -1,0 +1,212 @@
+"""Task-graph representation (paper §3.1).
+
+A task graph is a weighted DAG G_t(V_t, E_t): vertices are tasks, edges carry the
+data volume communicated from a parent task to a child task.  We keep the graph in
+CSR form in both directions (children and parents), require vertex ids to be a
+topological order (the paper's Algorithm 1 assumes this), and pre-compute the
+longest-path *level* of every vertex so the vectorized CEFT sweep can process one
+level at a time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskGraph:
+    n: int
+    # children CSR: edges (i -> cindices[cindptr[i]:cindptr[i+1]])
+    cindptr: np.ndarray
+    cindices: np.ndarray
+    cdata: np.ndarray  # data volume per child edge
+    # parents CSR (transpose), aligned data
+    pindptr: np.ndarray
+    pindices: np.ndarray
+    pdata: np.ndarray
+    # longest-path depth of each vertex (sources are level 0)
+    level: np.ndarray
+
+    # ------------------------------------------------------------------ basics
+    @property
+    def n_edges(self) -> int:
+        return int(self.cindices.shape[0])
+
+    def children(self, i: int) -> np.ndarray:
+        return self.cindices[self.cindptr[i] : self.cindptr[i + 1]]
+
+    def child_data(self, i: int) -> np.ndarray:
+        return self.cdata[self.cindptr[i] : self.cindptr[i + 1]]
+
+    def parents(self, i: int) -> np.ndarray:
+        return self.pindices[self.pindptr[i] : self.pindptr[i + 1]]
+
+    def parent_data(self, i: int) -> np.ndarray:
+        return self.pdata[self.pindptr[i] : self.pindptr[i + 1]]
+
+    @property
+    def in_degree(self) -> np.ndarray:
+        return np.diff(self.pindptr)
+
+    @property
+    def out_degree(self) -> np.ndarray:
+        return np.diff(self.cindptr)
+
+    @property
+    def sources(self) -> np.ndarray:
+        return np.nonzero(self.in_degree == 0)[0]
+
+    @property
+    def sinks(self) -> np.ndarray:
+        return np.nonzero(self.out_degree == 0)[0]
+
+    @property
+    def n_levels(self) -> int:
+        return int(self.level.max()) + 1 if self.n else 0
+
+    def levels(self) -> list[np.ndarray]:
+        """Vertices grouped by longest-path depth (each a topological batch)."""
+        order = np.argsort(self.level, kind="stable")
+        bounds = np.searchsorted(self.level[order], np.arange(self.n_levels + 1))
+        return [order[bounds[k] : bounds[k + 1]] for k in range(self.n_levels)]
+
+    # --------------------------------------------------------------- transforms
+    def transpose(self) -> "TaskGraph":
+        """Edge-reversed graph (paper §8.2: rank_ceft_up runs CEFT on G^T).
+
+        Vertex ids are relabelled as ``n-1-i`` so that ids remain a topological
+        order of the transposed graph.
+        """
+        n = self.n
+        remap = n - 1 - np.arange(n)
+        edges = []
+        for i in range(n):
+            for j, d in zip(self.children(i), self.child_data(i)):
+                edges.append((remap[j], remap[i], d))
+        return from_edges(n, edges)
+
+    def with_virtual_source_sink(self) -> tuple["TaskGraph", int, int]:
+        """Add a zero-cost virtual entry/exit if the graph has several of either.
+
+        Returns (graph, vsrc, vsink) where vsrc/vsink are -1 when not added.
+        Virtual vertices get id 0 / n+? while preserving topological ids.
+        """
+        srcs, snks = self.sources, self.sinks
+        add_src = len(srcs) > 1
+        add_snk = len(snks) > 1
+        if not add_src and not add_snk:
+            return self, -1, -1
+        off = 1 if add_src else 0
+        n = self.n + off + (1 if add_snk else 0)
+        edges: list[tuple[int, int, float]] = []
+        for i in range(self.n):
+            for j, d in zip(self.children(i), self.child_data(i)):
+                edges.append((i + off, j + off, float(d)))
+        vsrc = 0 if add_src else -1
+        vsink = n - 1 if add_snk else -1
+        if add_src:
+            for s in srcs:
+                edges.append((0, int(s) + off, 0.0))
+        if add_snk:
+            for s in snks:
+                edges.append((int(s) + off, n - 1, 0.0))
+        return from_edges(n, edges), vsrc, vsink
+
+
+def from_edges(
+    n: int, edges: Iterable[tuple[int, int, float]], *, sort_topologically: bool = False
+) -> TaskGraph:
+    """Build a TaskGraph from (src, dst, data) triples.
+
+    Vertex ids must already be a topological order (src < dst) unless
+    ``sort_topologically`` is set, in which case we relabel via Kahn's algorithm.
+    """
+    e = list(edges)
+    if e:
+        src = np.asarray([x[0] for x in e], dtype=np.int32)
+        dst = np.asarray([x[1] for x in e], dtype=np.int32)
+        dat = np.asarray([x[2] for x in e], dtype=np.float64)
+    else:
+        src = np.zeros(0, np.int32)
+        dst = np.zeros(0, np.int32)
+        dat = np.zeros(0, np.float64)
+    if src.size and not (src < dst).all():
+        if not sort_topologically:
+            raise ValueError("edges must satisfy src < dst (topological ids); "
+                             "pass sort_topologically=True to relabel")
+        order = _topo_order(n, src, dst)
+        rank = np.empty(n, np.int32)
+        rank[order] = np.arange(n, dtype=np.int32)
+        src, dst = rank[src], rank[dst]
+        if not (src < dst).all():  # pragma: no cover - cycle
+            raise ValueError("graph has a cycle")
+
+    def csr(a: np.ndarray, b: np.ndarray, d: np.ndarray):
+        order = np.lexsort((b, a))
+        a, b, d = a[order], b[order], d[order]
+        indptr = np.zeros(n + 1, np.int64)
+        np.add.at(indptr, a + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        return indptr, b.astype(np.int32), d
+
+    cindptr, cindices, cdata = csr(src, dst, dat)
+    pindptr, pindices, pdata = csr(dst, src, dat)
+
+    level = np.zeros(n, np.int32)
+    for i in range(n):  # ids are topological, single pass suffices
+        ps = pindices[pindptr[i] : pindptr[i + 1]]
+        if ps.size:
+            level[i] = level[ps].max() + 1
+    return TaskGraph(n, cindptr, cindices, cdata, pindptr, pindices, pdata, level)
+
+
+def _topo_order(n: int, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    indeg = np.zeros(n, np.int64)
+    np.add.at(indeg, dst, 1)
+    adj: list[list[int]] = [[] for _ in range(n)]
+    for a, b in zip(src.tolist(), dst.tolist()):
+        adj[a].append(b)
+    stack = [i for i in range(n) if indeg[i] == 0]
+    out = []
+    while stack:
+        i = stack.pop()
+        out.append(i)
+        for j in adj[i]:
+            indeg[j] -= 1
+            if indeg[j] == 0:
+                stack.append(j)
+    if len(out) != n:
+        raise ValueError("graph has a cycle")
+    return np.asarray(out, dtype=np.int32)
+
+
+def linear_chain(n: int, data: float = 1.0) -> TaskGraph:
+    return from_edges(n, [(i, i + 1, data) for i in range(n - 1)])
+
+
+def padded_level_tables(g: TaskGraph) -> dict[str, np.ndarray]:
+    """Fixed-shape per-level tables for the jittable CEFT sweep.
+
+    Returns arrays padded to (n_levels, max_width) and (n_levels, max_width, dmax):
+      tasks  : vertex id or -1
+      par    : parent vertex id or -1
+      pdata  : data volume on the parent edge (0 where padded)
+    Level 0 rows are sources (no parents).
+    """
+    lvls = g.levels()
+    n_levels = len(lvls)
+    width = max((len(l) for l in lvls), default=0)
+    dmax = max(1, int(g.in_degree.max()) if g.n else 1)
+    tasks = np.full((n_levels, width), -1, np.int32)
+    par = np.full((n_levels, width, dmax), -1, np.int32)
+    pdat = np.zeros((n_levels, width, dmax), np.float32)
+    for li, l in enumerate(lvls):
+        tasks[li, : len(l)] = l
+        for wi, t in enumerate(l):
+            ps = g.parents(int(t))
+            ds = g.parent_data(int(t))
+            par[li, wi, : len(ps)] = ps
+            pdat[li, wi, : len(ps)] = ds
+    return {"tasks": tasks, "par": par, "pdata": pdat}

@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, SyntheticLM
+__all__ = ["DataConfig", "SyntheticLM"]

@@ -1,0 +1,12 @@
+"""repro.kernels — Pallas TPU kernels for the paper's relaxation hot-spot.
+
+minplus    : blocked tropical (min-plus) matmul
+ceft_relax : fused CEFT level relaxation (min over parent classes -> masked max
+             over parents) with argmin/argmax path bookkeeping
+ref        : pure-jnp oracles; every kernel is validated against these in
+             interpret mode across shape/dtype sweeps (tests/test_kernels.py)
+"""
+from .ops import ceft_relax, minplus, pallas_relax
+from . import ref
+
+__all__ = ["ceft_relax", "minplus", "pallas_relax", "ref"]

@@ -1,0 +1,102 @@
+"""Fused CEFT level-relaxation Pallas kernel.
+
+One kernel invocation relaxes a whole topological level (paper Algorithm 1
+lines 6-18, batched over the level's tasks):
+
+    maxk[w, j] = max_d  min_l  pv[w, d, l] + comm(l, j | pdata[w, d])
+
+The XLA formulation materializes the (W, D, P, P) candidate tensor in HBM; the
+kernel keeps everything in VMEM: the grid tiles W, and the kernel loops over
+parent slots d, building only a (bw_, P, P) candidate tile per step and folding
+it into a running (masked) max with argmax/argmin bookkeeping for the path
+backtrack.  HBM traffic drops from O(W D P^2) to O(W D P) -- the relaxation is
+turned from memory-bound into VPU-bound (see EXPERIMENTS.md §Perf).
+
+TPU notes: P is the lane dimension -- pad classes to a multiple of 128 for
+peak efficiency (ops.py handles padding); bw_ (tasks per tile) is the sublane
+dimension, default 8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.0e38  # plain float: jnp scalars would be captured as consts by pallas_call
+
+
+def _relax_kernel(pv_ref, pdata_ref, valid_ref, L_ref, bw_ref, max_ref, argk_ref, argl_ref):
+    pv = pv_ref[...]          # (bw_, D, P)
+    pdata = pdata_ref[...]    # (bw_, D)
+    valid = valid_ref[...]    # (bw_, D)
+    L = L_ref[...]            # (P,)
+    bw = bw_ref[...]          # (P, P)
+    W, D, P = pv.shape
+    off = 1.0 - jnp.eye(P, dtype=pv.dtype)
+
+    def body(d, carry):
+        run_max, run_argk, run_argl = carry
+        pvd = jax.lax.dynamic_index_in_dim(pv, d, 1, keepdims=False)      # (W, P)
+        dat = jax.lax.dynamic_index_in_dim(pdata, d, 1, keepdims=False)   # (W,)
+        vd = jax.lax.dynamic_index_in_dim(valid, d, 1, keepdims=False)    # (W,)
+        comm = (L[None, :, None] + dat[:, None, None] / bw[None]) * off   # (W, Pl, Pj)
+        cand = pvd[:, :, None] + comm                                     # (W, Pl, Pj)
+        minl = jnp.min(cand, axis=1)                                      # (W, Pj)
+        argl = jnp.argmin(cand, axis=1).astype(jnp.int32)
+        minl = jnp.where(vd[:, None] > 0, minl, -BIG)
+        upd = minl > run_max  # strict: first maximal parent wins, like argmax
+        return (
+            jnp.where(upd, minl, run_max),
+            jnp.where(upd, d, run_argk),
+            jnp.where(upd, argl, run_argl),
+        )
+
+    init = (
+        jnp.full((W, P), -BIG, pv.dtype),
+        jnp.zeros((W, P), jnp.int32),
+        jnp.zeros((W, P), jnp.int32),
+    )
+    run_max, run_argk, run_argl = jax.lax.fori_loop(0, D, body, init)
+    max_ref[...] = run_max
+    argk_ref[...] = run_argk
+    argl_ref[...] = run_argl
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def ceft_relax_pallas(
+    pv: jnp.ndarray,      # (W, D, P) float32
+    pdata: jnp.ndarray,   # (W, D)    float32
+    validp: jnp.ndarray,  # (W, D)    float32 mask (1 real parent / 0 padding)
+    L: jnp.ndarray,       # (P,)      float32
+    bw: jnp.ndarray,      # (P, P)    float32
+    *,
+    block_w: int = 8,
+    interpret: bool = False,
+):
+    W, D, P = pv.shape
+    assert W % block_w == 0, "pad via ops.ceft_relax"
+    grid = (W // block_w,)
+    return pl.pallas_call(
+        _relax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_w, D, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_w, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, D), lambda i: (i, 0)),
+            pl.BlockSpec((P,), lambda i: (0,)),
+            pl.BlockSpec((P, P), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_w, P), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, P), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, P), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((W, P), pv.dtype),
+            jax.ShapeDtypeStruct((W, P), jnp.int32),
+            jax.ShapeDtypeStruct((W, P), jnp.int32),
+        ],
+        interpret=interpret,
+    )(pv, pdata, validp, L, bw)

@@ -1,0 +1,63 @@
+"""Blocked tropical (min-plus) matmul Pallas kernel.
+
+TPU adaptation of the paper's relaxation hot-spot (DESIGN.md §2): the classic
+(i, j, k) matmul grid with BlockSpec VMEM tiling, accumulating with ``min``
+instead of ``+`` and combining with ``+`` instead of ``*``.  The contraction
+blocks are kept *shallow* (bk << bm, bn) because the (bm, bk, bn) candidate
+tensor must live in VMEM: with (256, 16, 256) fp32 that is 4 MiB -- inside the
+~16 MiB VMEM budget with double buffering, while bm/bn stay multiples of the
+128-lane MXU/VPU tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.0e38  # plain float: jnp scalars would be captured as consts by pallas_call
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, BIG)
+
+    a = a_ref[...]  # (bm, bk)
+    b = b_ref[...]  # (bk, bn)
+    cand = jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+    o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def minplus_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 256,
+    bk: int = 16,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """C[i,j] = min_k A[i,k] + B[k,j] with (bm, bk, bn) VMEM tiles.
+
+    Shapes must be multiples of the block sizes (ops.py pads with +BIG, which
+    is the identity of the (min, +) semiring).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, "pad via ops.minplus"
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers around the Pallas kernels: padding to block multiples,
+backend selection (TPU kernel vs interpret-mode validation on CPU), and
+adapters matching ``repro.core.ceft_jax``'s relax_fn signature."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ceft_relax import ceft_relax_pallas
+from .minplus import BIG, minplus_pallas
+from . import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value) -> jnp.ndarray:
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def minplus(a, b, *, bm: int = 256, bk: int = 16, bn: int = 256, interpret: bool | None = None):
+    """Tropical matmul C[i,j] = min_k A[i,k]+B[k,j], padded to block multiples
+    with +BIG (the (min,+) identity) and sliced back."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = a.shape[0], b.shape[1]
+    a = _pad_to(_pad_to(a, 0, bm, BIG), 1, bk, BIG)
+    b = _pad_to(_pad_to(b, 0, bk, BIG), 1, bn, BIG)
+    out = minplus_pallas(a, b, bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return out[:m, :n]
+
+
+def ceft_relax(pv, pdata, validp, L, bw, *, block_w: int = 8, interpret: bool | None = None):
+    """Fused CEFT level relaxation (see ceft_relax.py).  Pads the task axis to
+    a block multiple (padding rows carry validp=0) and, on TPU, the class axis
+    to the 128-lane tile (padded classes get +BIG values so they are never
+    selected)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    W, D, P = pv.shape
+    pv = _pad_to(pv, 0, block_w, 0.0)
+    pdata = _pad_to(pdata, 0, block_w, 0.0)
+    validp = _pad_to(validp, 0, block_w, 0.0)
+    if _on_tpu():
+        pv = _pad_to(pv, 2, 128, BIG)
+        L = _pad_to(L, 0, 128, BIG)
+        bw = _pad_to(_pad_to(bw, 0, 128, 1.0), 1, 128, 1.0)
+    maxk, argk, argl = ceft_relax_pallas(
+        pv, pdata, validp, L, bw, block_w=block_w, interpret=interpret
+    )
+    maxk, argk, argl = maxk[:W, :P], argk[:W, :P], argl[:W, :P]
+    # tasks with no valid parent have undefined argk/argl: pin them to -1
+    has = (validp[:W] > 0).any(axis=1)[:, None]
+    return maxk, jnp.where(has, argk, -1), jnp.where(has, argl, -1)
+
+
+def pallas_relax(pv, pdata, validp, L, bw):
+    """Drop-in ``relax_fn`` for repro.core.ceft_jax._sweep: same contract as
+    ``xla_relax`` (validp arrives as bool)."""
+    maxk, argk, argl = ceft_relax(pv, pdata, validp.astype(pv.dtype), L, bw)
+    return maxk, argk, argl

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 3.0e38  # plain float: jnp scalars would be captured as consts by pallas_call
+
+
+def minplus_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Tropical (min-plus) matrix product: C[i,j] = min_k A[i,k] + B[k,j].
+
+    The algebraic core of shortest/longest-path relaxation; CEFT's inner
+    ``min_{p_l} CEFT(t_k, p_l) + comm(p_l, p_j)`` is one row of this product.
+    """
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def ceft_relax_ref(pv, pdata, validp, L, bw):
+    """One CEFT level relaxation (paper eq. 4 inner loops), dense form.
+
+    pv     : (W, D, P)  CEFT values of the D (padded) parents of W tasks
+    pdata  : (W, D)     data volume on each parent edge
+    validp : (W, D)     1.0 for real parents, 0.0 for padding
+    L      : (P,)       per-class communication startup
+    bw     : (P, P)     class-pair bandwidth
+
+    Returns (maxk (W,P) float32, argk (W,P) int32, argl (W,P) int32):
+    max over parents of (min over parent classes of value+comm), plus the
+    argmax parent slot and that parent's argmin class (for path backtracking).
+    Padded-parent rows yield -BIG; caller masks on ``validp.any(-1)``.
+    """
+    P = L.shape[0]
+    off = 1.0 - jnp.eye(P, dtype=pv.dtype)
+    comm = (L[:, None] + pdata[..., None, None] / bw) * off        # (W,D,P,P)
+    cand = pv[..., :, None] + comm                                  # (W,D,Pl,Pj)
+    argl = jnp.argmin(cand, axis=2).astype(jnp.int32)               # (W,D,Pj)
+    minl = jnp.min(cand, axis=2)                                    # (W,D,Pj)
+    minl = jnp.where(validp[..., None] > 0, minl, -BIG)
+    argk = jnp.argmax(minl, axis=1).astype(jnp.int32)               # (W,Pj)
+    maxk = jnp.max(minl, axis=1)
+    argl_sel = jnp.take_along_axis(argl, argk[:, None, :], axis=1)[:, 0, :]
+    # tasks with no valid parent have undefined argk/argl: pin them to -1
+    has = (validp > 0).any(axis=1)[:, None]
+    argk = jnp.where(has, argk, -1)
+    argl_sel = jnp.where(has, argl_sel, -1)
+    return maxk, argk, argl_sel

@@ -1,0 +1,6 @@
+"""repro.launch — mesh, step builders, multi-pod dry-run, roofline."""
+from .mesh import make_production_mesh, make_test_mesh, mesh_axis_sizes
+from .steps import build_decode, build_prefill, build_train
+
+__all__ = ["build_decode", "build_prefill", "build_train",
+           "make_production_mesh", "make_test_mesh", "mesh_axis_sizes"]

@@ -1,0 +1,118 @@
+"""Post-SPMD HLO text analysis: collective inventory and byte counts.
+
+``compiled.cost_analysis()`` has no collective figures, so we parse the
+optimized per-device HLO (``compiled.as_text()``): every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op's result
+bytes, execution-weighted by the trip counts of enclosing ``while`` loops
+(jax.lax.scan lowers to while; the trip count is recovered from the largest
+integer constant in the loop's condition computation -- exact for
+scan-generated loops).
+
+Byte convention (ring cost model): per-device link bytes ~= result bytes x
+factor, factor 2 for all-reduce (reduce-scatter + all-gather phases), 1
+otherwise.  ``collective_bytes`` is the global figure (x n_devices), matching
+the roofline term collective_bytes / (chips x link_bw).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_FACTOR = {"all-reduce": 2.0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)[ ]*\(", re.M)
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+        break  # first shape in the segment is the result type
+    return total
+
+
+def _split_computations(text: str) -> dict[str, str]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and ("->" in line or line.rstrip().endswith("{")):
+            cur = m.group(1)
+            comps[cur] = []
+        if cur is not None:
+            comps[cur].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def _trip_count(cond_text: str) -> int:
+    ints = [int(x) for x in re.findall(r"constant\((\d+)\)", cond_text)]
+    return max(ints) if ints else 1
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> dict:
+    comps = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            entry = m.group(1) if m else None
+            break
+
+    # local (unweighted) collective bytes + call/while edges per computation
+    local: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for name, body in comps.items():
+        for line in body.splitlines():
+            for kw in COLLECTIVES:
+                if f" {kw}(" in line or f"{kw}-start(" in line:
+                    b = _shape_bytes(line.split("=", 1)[-1])
+                    local[name] += b * _FACTOR.get(kw, 1.0)
+                    counts[kw] += 1
+            mw = re.search(r"while\(.*?condition=%?([\w.\-]+),.*?body=%?([\w.\-]+)", line)
+            if not mw:  # attribute order can vary
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                mw = (mc, mb) if (mb and mc and "while(" in line) else None
+                if mw:
+                    cond, bod = mc.group(1), mb.group(1)
+                    edges[name].append((bod, _trip_count(comps.get(cond, ""))))
+                continue
+            cond, bod = mw.group(1), mw.group(2)
+            edges[name].append((bod, _trip_count(comps.get(cond, ""))))
+        for mm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", body):
+            callee = mm.group(1)
+            if callee in comps and callee != name:
+                edges[name].append((callee, 1))
+
+    def weighted(name: str, seen: tuple = ()) -> float:
+        if name not in comps or name in seen:
+            return 0.0
+        total = local.get(name, 0.0)
+        for callee, mult in edges.get(name, []):
+            total += mult * weighted(callee, seen + (name,))
+        return total
+
+    per_device = weighted(entry) if entry else sum(local.values())
+    flat = sum(local.values())
+    return {
+        "collective_bytes": per_device * n_devices,
+        "collective_bytes_per_device": per_device,
+        "collective_bytes_flat": flat * n_devices,
+        "op_counts": dict(counts),
+    }

@@ -1,0 +1,39 @@
+"""Mesh construction for the production topology.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax import;
+smoke tests and benches see the 1 real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mesh(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2 pods of 256
+    (pod, data, model); the pod axis carries data parallelism over DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None):
+    """Small mesh over whatever devices exist (CPU smoke tests)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0:
+            model = cand
+            break
+    return _mesh((n // model, model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,13 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# env must precede any jax import (same contract as dryrun.py)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+
+from repro.launch.roofline import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Step builders: jit-ready train / prefill / decode functions with the full
+sharding contract (params, optimizer state, inputs, caches)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..models.common import (
+    abstract_params,
+    init_params,
+    param_shardings,
+    resolve_spec,
+    tree_map_pspec,
+)
+from ..models.model import Model
+from ..optim import AdamW, for_config
+from .mesh import mesh_axis_sizes
+
+# logical axes of every named model input
+INPUT_LOGICAL: dict[str, tuple[str, ...]] = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "embeds": ("batch", "seq", "none"),
+    "positions": ("none", "batch", "seq"),
+    "frames": ("batch", "none", "none"),
+    "pos": (),
+}
+
+
+def input_shardings(inputs: dict[str, jax.ShapeDtypeStruct], mesh):
+    ms = mesh_axis_sizes(mesh)
+    out = {}
+    for k, v in inputs.items():
+        logical = INPUT_LOGICAL[k]
+        out[k] = NamedSharding(mesh, resolve_spec(v.shape, logical, ms))
+    return out
+
+
+def make_optimizer(cfg: ArchConfig, total_steps: int = 10_000,
+                   peak_lr: float = 3e-4) -> AdamW:
+    lr = for_config(cfg.schedule, peak=peak_lr, warmup=min(500, total_steps // 10),
+                    total=total_steps)
+    return AdamW(lr=lr, moment_dtype=cfg.optstate_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStep:
+    model: Model
+    optimizer: AdamW
+
+    def __call__(self, params, opt_state, batch):
+        loss, grads = jax.value_and_grad(self.model.loss)(params, batch)
+        new_p, new_s, gnorm = self.optimizer.update(grads, opt_state, params)
+        return new_p, new_s, {"loss": loss, "grad_norm": gnorm}
+
+
+def build_train(model: Model, mesh, total_steps: int = 10_000,
+                peak_lr: float = 3e-4):
+    """Returns (jitted step, abstract (params, opt_state), shardings dict)."""
+    opt = make_optimizer(model.cfg, total_steps, peak_lr)
+    step = TrainStep(model, opt)
+    specs = model.specs()
+    p_sh = param_shardings(specs, mesh)
+    m_sh = param_shardings(opt.moment_specs(specs), mesh)
+    from ..optim import AdamWState
+    o_sh = AdamWState(NamedSharding(mesh, PartitionSpec()), m_sh, m_sh)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, None),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return jitted, opt, {"params": p_sh, "opt": o_sh}
+
+
+def build_prefill(model: Model, mesh):
+    specs = model.specs()
+    p_sh = param_shardings(specs, mesh)
+    jitted = jax.jit(model.prefill, in_shardings=(p_sh, None))
+    return jitted, {"params": p_sh}
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeStep:
+    model: Model
+
+    def __call__(self, params, cache, inputs: dict):
+        logits, new_cache = self.model.decode(
+            params, cache, inputs["tokens"], inputs["pos"],
+            positions=inputs.get("positions"),
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+
+def build_decode(model: Model, mesh, cell: ShapeCell):
+    step = DecodeStep(model)
+    specs = model.specs()
+    p_sh = param_shardings(specs, mesh)
+    c_specs = model.cache_specs(cell.global_batch, cell.seq_len)
+    c_sh = param_shardings(c_specs, mesh)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, c_sh, None),
+        out_shardings=(None, None, c_sh),
+        donate_argnums=(1,),
+    )
+    return jitted, {"params": p_sh, "cache": c_sh}
+
+
+def abstract_state(model: Model, opt: AdamW):
+    """Abstract (params, opt_state) for dry-run lowering."""
+    specs = model.specs()
+    params = abstract_params(specs, jnp.dtype(model.cfg.param_dtype))
+    mspec = opt.moment_specs(specs)
+    m = abstract_params(mspec, jnp.dtype(opt.moment_dtype))
+    v = abstract_params(mspec, jnp.dtype(opt.moment_dtype))
+    count = jax.ShapeDtypeStruct((), jnp.int32)
+    from ..optim import AdamWState
+    return params, AdamWState(count, m, v)
+
+
+def abstract_cache(model: Model, cell: ShapeCell):
+    return tree_map_pspec(
+        lambda _, p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype)),
+        model.cache_specs(cell.global_batch, cell.seq_len),
+    )

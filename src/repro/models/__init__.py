@@ -1,0 +1,15 @@
+"""repro.models — pure-JAX model substrate for the assigned architectures."""
+from .common import (
+    PSpec,
+    abstract_params,
+    constrain,
+    init_params,
+    param_shardings,
+    resolve_spec,
+)
+from .model import Model, build
+
+__all__ = [
+    "Model", "PSpec", "abstract_params", "build", "constrain",
+    "init_params", "param_shardings", "resolve_spec",
+]

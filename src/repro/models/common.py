@@ -1,0 +1,218 @@
+"""Model substrate plumbing: spec-first parameters and logical-axis sharding.
+
+Spec-first parameters: model builders return a *tree of PSpec* (shape + logical
+axis names + init kind).  The tree is materialized three ways:
+  * ``init_params``      -> real arrays (training / smoke tests)
+  * ``abstract_params``  -> ShapeDtypeStruct (the multi-pod dry-run: no bytes)
+  * ``param_shardings``  -> NamedSharding per leaf from the logical rules
+
+Logical-axis sharding with divisibility degradation (DESIGN.md §5): a logical
+axis maps to mesh axes only when the dimension is divisible by their product,
+so minicpm's 36 heads stay replicated on a 16-way model axis while llama's 128
+heads shard -- one rules table serves all ten architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+# logical axis name -> preferred mesh axes (applied greedily, outermost first)
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),        # sequence-parallel residual stream (train/prefill)
+    "cache_seq": ("model",),  # decode-SP: KV cache sharded along sequence
+    "cache_hd": (),           # alternative: cache head_dim sharding
+    "cache_batch": ("pod", "data"),  # caches keep batch sharding always
+    "tile_q": ("model",),     # attn-tile fallback when heads don't divide
+    "vocab": ("model",),
+    "heads": ("model",),
+    "qkv": ("model",),        # flattened (n_heads * head_dim) projections
+    "ffn": ("model",),
+    "experts": ("model",),
+    "embed": ("data",),       # FSDP: stacked params sharded over data
+    "embed_d": ("data",),     # the embedding/unembedding tables' d_model axis
+    "ssm_inner": ("model",),
+    "layers": (),
+    "state": (),
+    "none": (),
+}
+
+# Sharding profiles (§Perf hillclimb levers; see EXPERIMENTS.md):
+#  baseline : FSDP everywhere, decode-SP caches -- the paper-faithful start
+#  opt1     : baseline minus FSDP on the (un)embedding tables, whose data-axis
+#             shards were re-gathered every loss chunk
+#  serve    : inference layout -- 2D tensor parallelism on weights (no
+#             contraction-dim sharding => no per-layer weight all-gathers at
+#             tiny token counts), KV caches sharded on head_dim instead of
+#             sequence (local cache updates, cheap partial-softmax reductions)
+PROFILES: dict[str, dict[str, tuple[str, ...]]] = {
+    "baseline": {},
+    "opt1": {"embed_d": ()},
+    # moe_ep: for MoE archs whose expert count does not divide the 16-way
+    # model axis (mixtral: 8), run on the (data=16, expert=8, tp=2) mesh --
+    # experts get a true EP axis, dense layers use (expert x tp) as a 16-way
+    # model axis, and the dispatched tensor stays fully sharded end-to-end.
+    "moe_ep": {
+        "experts": ("expert",),
+        "heads": ("expert", "tp"),
+        "qkv": ("expert", "tp"),
+        "ffn": ("tp",),
+        "vocab": ("expert", "tp"),
+        "seq": ("expert", "tp"),
+        "cache_seq": ("expert", "tp"),
+        "ssm_inner": ("expert", "tp"),
+        "tile_q": ("expert", "tp"),
+        "embed_d": (),
+    },
+    # serve: weights live resident in a 2D (model x data) layout -- no
+    # contraction-dim sharding, so no per-step weight all-gathers; the tiny
+    # decode activations REPLICATE over the data axis (batch: ()) instead of
+    # dragging 100x their size in weight movement; KV caches keep batch+seq
+    # sharding (cache_batch/cache_seq) since they dominate memory.
+    "serve": {
+        "batch": (),
+        "seq": (),
+        "embed_d": (),
+        "embed": (),
+        "qkv": ("model", "data"),
+        "ffn": ("model", "data"),
+        "vocab": ("model", "data"),
+        "ssm_inner": ("model", "data"),
+    },
+}
+_DEFAULT_RULES = dict(LOGICAL_RULES)
+
+
+def set_sharding_profile(name: str) -> None:
+    """Switch the logical->mesh rules table (mutates module state; the
+    launcher selects 'serve' for prefill/decode cells, 'opt1' for training
+    after the §Perf iteration validated it)."""
+    LOGICAL_RULES.clear()
+    LOGICAL_RULES.update(_DEFAULT_RULES)
+    LOGICAL_RULES.update(PROFILES[name])
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """One parameter leaf: shape + logical axes + initializer."""
+    shape: tuple[int, ...]
+    logical: tuple[str, ...]
+    init: str = "fan_in"      # fan_in | zeros | ones | embed | a_log | dt_bias
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def tree_map_pspec(fn: Callable[[str, PSpec], Any], tree, path: str = "") -> Any:
+    if is_pspec(tree):
+        return fn(path, tree)
+    if isinstance(tree, dict):
+        return {k: tree_map_pspec(fn, v, f"{path}/{k}") for k, v in tree.items()}
+    raise TypeError(type(tree))
+
+
+def _initialize(key: jax.Array, p: PSpec, dtype) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "a_log":  # mamba2: A ~ U[1,16], stored as log
+        u = jax.random.uniform(key, p.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if p.init == "dt_bias":  # mamba2: softplus^-1 of dt ~ logU[1e-3, 1e-1]
+        u = jax.random.uniform(key, p.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    if p.init == "embed":
+        return (jax.random.normal(key, p.shape, jnp.float32) * 0.02).astype(dtype)
+    # fan_in: truncated-normal-ish with 1/sqrt(fan_in); fan-in = first axis
+    # that is not a stacking ("layers") axis
+    fan = 1
+    for s, l in zip(p.shape, p.logical):
+        if l != "layers":
+            fan = s
+            break
+    scale = 1.0 / math.sqrt(max(fan, 1))
+    return (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(spec_tree, key: jax.Array, param_dtype=jnp.float32):
+    """Materialize real parameters (deterministic per-path key folding)."""
+    leaves = []
+    tree_map_pspec(lambda path, p: leaves.append(path), spec_tree)
+    idx = {path: i for i, path in enumerate(sorted(leaves))}
+
+    def make(path, p):
+        k = jax.random.fold_in(key, idx[path])
+        return _initialize(k, p, param_dtype)
+
+    return tree_map_pspec(make, spec_tree)
+
+
+def abstract_params(spec_tree, param_dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins: weak-type-correct, zero allocation."""
+    return tree_map_pspec(
+        lambda _, p: jax.ShapeDtypeStruct(p.shape, param_dtype), spec_tree
+    )
+
+
+# ----------------------------------------------------------------- shardings
+def resolve_spec(shape: tuple[int, ...], logical: tuple[str, ...], mesh_shape: dict[str, int]) -> PartitionSpec:
+    """Logical axes -> PartitionSpec with divisibility degradation."""
+    out: list[Any] = []
+    used: set[str] = set()
+    for dim, lname in zip(shape, logical):
+        axes: list[str] = []
+        size = 1
+        for ax in LOGICAL_RULES.get(lname, ()):
+            if ax in mesh_shape and ax not in used and dim % (size * mesh_shape[ax]) == 0:
+                axes.append(ax)
+                size *= mesh_shape[ax]
+        used.update(axes)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return PartitionSpec(*out)
+
+
+def param_shardings(spec_tree, mesh: jax.sharding.Mesh):
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return tree_map_pspec(
+        lambda _, p: NamedSharding(mesh, resolve_spec(p.shape, p.logical, ms)),
+        spec_tree,
+    )
+
+
+def logical_pspecs(spec_tree, mesh_shape: dict[str, int]):
+    return tree_map_pspec(
+        lambda _, p: resolve_spec(p.shape, p.logical, mesh_shape), spec_tree
+    )
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Sharding constraint by logical axis names, no-op outside a mesh context.
+
+    Activations use this (params are sharded via in_shardings).  Degradation:
+    an axis that does not divide is dropped, so every architecture compiles on
+    every mesh.
+    """
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or am.empty:
+        return x
+    ms = dict(am.shape)
+    spec = resolve_spec(x.shape, tuple(l or "none" for l in logical), ms)
+    return jax.lax.with_sharding_constraint(x, spec)

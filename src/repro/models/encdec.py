@@ -1,0 +1,175 @@
+"""Encoder-decoder (Whisper-style) stack.
+
+The audio conv frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, T_enc, D).  Sinusoidal absolute positions on
+both sides (no RoPE), GELU 2-proj MLPs, MHA.  Decode keeps a self-attn KV
+cache (sized to the shape cell) plus fixed cross-attn K/V over the encoder
+output.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import PSpec, constrain
+from .layers import (
+    attn_decode,
+    attn_prefill,
+    attn_specs,
+    chunked_attention,
+    mlp,
+    mlp_specs,
+    rmsnorm,
+    rmsnorm_spec,
+    sinusoidal_embedding,
+)
+from .transformer import stack_specs, xent_loss  # noqa: F401  (xent reused)
+
+
+def enc_block_specs(cfg: ArchConfig) -> dict:
+    return {
+        "norm1": rmsnorm_spec(cfg.d_model),
+        "attn": attn_specs(cfg),
+        "norm2": rmsnorm_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def dec_block_specs(cfg: ArchConfig) -> dict:
+    return {
+        "norm1": rmsnorm_spec(cfg.d_model),
+        "self_attn": attn_specs(cfg),
+        "norm_x": rmsnorm_spec(cfg.d_model),
+        "cross_attn": attn_specs(cfg),
+        "norm2": rmsnorm_spec(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def model_specs(cfg: ArchConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab
+    return {
+        "embed": PSpec((V, d), ("vocab", "embed_d"), init="embed"),
+        "enc_norm": rmsnorm_spec(d),
+        "final_norm": rmsnorm_spec(d),
+        "enc_blocks": stack_specs(enc_block_specs(cfg), cfg.enc_layers),
+        "dec_blocks": stack_specs(dec_block_specs(cfg), cfg.n_layers),
+        "unembed": PSpec((d, V), ("embed_d", "vocab")),
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    kv = lambda s: PSpec(
+        (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.hd),
+        ("layers", "cache_batch", "cache_seq", "heads", "cache_hd"),
+        init="zeros", dtype=cfg.compute_dtype,
+    )
+    return {"self": {"k": kv(seq), "v": kv(seq)},
+            "cross": {"k": kv(cfg.enc_seq), "v": kv(cfg.enc_seq)}}
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames: (B, T, D) stub embeddings -> (B, T, D) encoder states."""
+    B, T, D = frames.shape
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoidal_embedding(T, D).astype(x.dtype)[None]
+    x = constrain(x, "batch", "seq", None)
+
+    def body(x, bp):
+        h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        a, _ = attn_prefill(bp["attn"], h, cfg, None, causal=False)
+        x = x + a
+        h = rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        return x + mlp(bp["mlp"], h, cfg), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(bp, enc_out, cfg: ArchConfig):
+    B, T, _ = enc_out.shape
+    k = (enc_out @ bp["cross_attn"]["wk"].astype(enc_out.dtype)).reshape(
+        B, T, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ bp["cross_attn"]["wv"].astype(enc_out.dtype)).reshape(
+        B, T, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def _cross_attend(bp, h, k, v, cfg: ArchConfig):
+    B, S, D = h.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (h @ bp["cross_attn"]["wq"].astype(h.dtype)).reshape(B, S, hq, hd)
+    qh = jnp.moveaxis(q.reshape(B, S, hkv, hq // hkv, hd), 1, 3)
+    out = chunked_attention(qh, k.astype(h.dtype), v.astype(h.dtype), causal=False)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, hq * hd)
+    return out @ bp["cross_attn"]["wo"].astype(h.dtype)
+
+
+def decode_full(params, cfg: ArchConfig, tokens, enc_out, want_cache=False):
+    """Teacher-forced decoder pass (training / prefill)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoidal_embedding(S, cfg.d_model).astype(x.dtype)[None]
+    x = constrain(x, "batch", "seq", None)
+
+    def body(x, bp):
+        h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        a, (k, v) = attn_prefill(bp["self_attn"], h, cfg, None, causal=True)
+        x = x + a
+        h = rmsnorm(bp["norm_x"], x, cfg.norm_eps)
+        ck, cv = _cross_kv(bp, enc_out, cfg)
+        x = x + _cross_attend(bp, h, ck, cv, cfg)
+        h = rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        x = x + mlp(bp["mlp"], h, cfg)
+        cache = {"self": {"k": k, "v": v}, "cross": {"k": ck, "v": cv}}
+        return x, (cache if want_cache else 0)
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, caches = jax.lax.scan(body_fn, x, params["dec_blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, (caches if want_cache else None)
+
+
+def loss(params, cfg: ArchConfig, frames, tokens, labels):
+    enc_out = encode(params, cfg, frames)
+    hidden, _ = decode_full(params, cfg, tokens, enc_out)
+    return xent_loss(params, cfg, hidden, labels), jnp.zeros((), jnp.float32)
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens, pos):
+    """One decoder token.  cache: {self: {k,v (L,B,Sc,H,hd)}, cross: {...}}."""
+    B, _ = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    pe = sinusoidal_embedding(1, cfg.d_model, offset=0).astype(x.dtype)
+    # offset by pos dynamically: recompute the single sinusoid row at `pos`
+    d = cfg.d_model
+    inv = 1e4 ** (-jnp.arange(0, d // 2, dtype=jnp.float32) / (d // 2 - 1 + 1e-9))
+    ang = pos.astype(jnp.float32) * inv
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(x.dtype)
+    x = x + pe
+
+    def body(x, scanned):
+        bp, pc = scanned
+        h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        a, nself = attn_decode(bp["self_attn"], h, cfg, pc["self"], pos, None)
+        x = x + a
+        h = rmsnorm(bp["norm_x"], x, cfg.norm_eps)
+        hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q = (h @ bp["cross_attn"]["wq"].astype(h.dtype)).reshape(B, 1, hq, hd)
+        qh = jnp.moveaxis(q.reshape(B, 1, hkv, hq // hkv, hd), 1, 3)
+        ck, cv = pc["cross"]["k"].astype(h.dtype), pc["cross"]["v"].astype(h.dtype)
+        co = chunked_attention(qh, ck, cv, causal=False)
+        co = jnp.moveaxis(co, 3, 1).reshape(B, 1, hq * hd)
+        x = x + co @ bp["cross_attn"]["wo"].astype(h.dtype)
+        h = rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        x = x + mlp(bp["mlp"], h, cfg)
+        return x, {"self": nself, "cross": pc["cross"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["unembed"].astype(x.dtype)).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,86 @@
+"""GShard-style token-choice MoE (einsum dispatch, capacity-factor drops).
+
+Tokens are processed in *groups* (a sequence slice) so the dispatch/combine
+tensors stay O(tokens x E x C) with C = cf * group * k / E -- the group size
+bounds the quadratic dispatch-einsum cost to a few percent of expert FLOPs
+(group 256: E*C ~ 2.5 * 256 vs d_ff contraction; see EXPERIMENTS.md §Roofline
+"useful-FLOPs ratio").
+
+Expert placement: true EP (experts sharded over the model axis) when the
+expert count divides it (dbrx/jamba: 16); otherwise tensor-parallel experts
+(d_ff over model; mixtral: 8 experts on a 16-way axis).  The divisibility
+degradation in common.resolve_spec picks this automatically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import PSpec, constrain
+
+AUX_COEF = 0.01
+GROUP = 256
+
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    assert cfg.mlp_style == "swiglu", "MoE experts are SwiGLU"
+    return {
+        "router": PSpec((d, e), ("embed", "experts")),
+        "wg": PSpec((e, d, ff), ("experts", "embed", "ffn")),
+        "wu": PSpec((e, d, ff), ("experts", "embed", "ffn")),
+        "wd": PSpec((e, ff, d), ("experts", "ffn", "embed")),
+    }
+
+
+def moe(p, x, cfg: ArchConfig):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    gs = min(GROUP, S)
+    nG = S // gs
+    assert S % gs == 0, (S, gs)
+    C = max(1, int(cfg.capacity_factor * gs * K / E))
+
+    xg = x.reshape(B, nG, gs, D)
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (B,nG,gs,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                               # (B,nG,gs,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    mask = jax.nn.one_hot(idx, E, dtype=jnp.float32)                  # (B,nG,gs,K,E)
+    # position of each (token, k) within its expert's capacity, per group
+    flat = mask.reshape(B, nG, gs * K, E)
+    pos = jnp.cumsum(flat, axis=2) - 1.0
+    pos = pos.reshape(B, nG, gs, K, E)
+    keep = (pos < C) & (mask > 0)
+    pos = jnp.clip(pos, 0, C - 1).astype(jnp.int32)
+
+    # combine[b,g,s,e,c] = sum_k gate_k * keep * onehot(pos, C)
+    poh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None]  # (B,nG,gs,K,E,C)
+    combine = jnp.einsum("bgsk,bgskec->bgsec", gate, poh)
+    dispatch = (combine > 0).astype(x.dtype)                           # (B,nG,gs,E,C)
+
+    xe = jnp.einsum("bgsec,bgsd->begcd", dispatch, xg)                 # (B,E,nG,C,D)
+    # experts shard the model axis when the count divides (true EP); otherwise
+    # the group axis keeps it, so the dispatched tensor never de-shards
+    xe = constrain(xe, "batch", "experts", "seq", None, None)
+    wg = p["wg"].astype(x.dtype)
+    wu = p["wu"].astype(x.dtype)
+    wd = p["wd"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("begcd,edf->begcf", xe, wg))
+    h = h * jnp.einsum("begcd,edf->begcf", xe, wu)
+    h = constrain(h, "batch", "experts", "seq", None, "ffn")
+    ye = jnp.einsum("begcf,efd->begcd", h, wd)                         # (B,E,nG,C,D)
+    # pin ye to the dispatched layout so the combine-einsum backward does not
+    # hit SPMD's involuntary-full-rematerialization path (XLA b/433785288)
+    ye = constrain(ye, "batch", "experts", "seq", None, None)
+    out = jnp.einsum("bgsec,begcd->bgsd", combine.astype(x.dtype), ye)
+    out = out.reshape(B, S, D)
+
+    # Switch-style load-balance loss: E * sum_e f_e * p_e (per group, meaned)
+    f = mask.sum(3).mean(2)          # (B,nG,E): fraction routed (pre-drop)
+    pbar = probs.mean(2)             # (B,nG,E)
+    aux = AUX_COEF * E * jnp.mean(jnp.sum(f * pbar, axis=-1))
+    return constrain(out, "batch", "seq", None), aux

@@ -1,0 +1,176 @@
+"""Mamba-2 (SSD — state-space duality) block in pure JAX [arXiv:2405.21060].
+
+Chunked SSD: within a chunk the token-mixing is the quadratic dual form
+(masked attention-like (Q,Q) tile, MXU-friendly); across chunks the recurrent
+state (B, H, P, N) is carried by an associative ``lax.scan`` in fp32.  Decode
+is the O(1) recurrent step.  ngroups=1 (B/C shared across heads), depthwise
+causal conv on (x, B, C) as in the reference implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import PSpec, constrain
+from .layers import rmsnorm
+
+
+def _dims(cfg: ArchConfig):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = di + 2 * N
+    return di, H, P, N, conv_dim
+
+
+def ssm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di, H, P, N, conv_dim = _dims(cfg)
+    return {
+        "in_proj": PSpec((d, 2 * di + 2 * N + H), ("embed", "ssm_inner")),
+        "conv_w": PSpec((cfg.ssm_conv, conv_dim), ("none", "ssm_inner")),
+        "conv_b": PSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": PSpec((H,), ("none",), init="a_log"),
+        "d_skip": PSpec((H,), ("none",), init="ones"),
+        "dt_bias": PSpec((H,), ("none",), init="dt_bias"),
+        "norm": PSpec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": PSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along S: xbc (B, S, Cd), w (k, Cd)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < t <= i} x[..., t] (else -inf)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_prefill(p, x, cfg: ArchConfig, init_state=None):
+    """x: (B, S, D) -> (y (B, S, D), final_states dict).  S % chunk == 0 or
+    S < chunk (single padded chunk)."""
+    B, S, D = x.shape
+    di, H, P, N, conv_dim = _dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    dt_dtype = x.dtype
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)           # (B,S,2di+2N+H)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    conv_tail = xbc[:, -(cfg.ssm_conv - 1):, :]          # decode conv state seed
+    xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xs, Bc, Cc = jnp.split(xbc, [di, di + N], axis=-1)   # (B,S,di),(B,S,N),(B,S,N)
+    xs = constrain(xs, "batch", "seq", "ssm_inner")
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # (B,S,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                        # (H,)
+
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xh = xs.reshape(B, nc, Q, H, P)
+    Bh = Bc.reshape(B, nc, Q, N).astype(jnp.float32)
+    Ch = Cc.reshape(B, nc, Q, N).astype(jnp.float32)
+    dth = dt.reshape(B, nc, Q, H)                                       # fp32
+    dA = dth * A                                                        # (B,nc,Q,H)
+    dAc = jnp.cumsum(dA, axis=2)                                        # within-chunk
+
+    # ---- intra-chunk (dual/quadratic form) ----
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, 2)))                       # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Ch, Bh)                      # (B,nc,Q,Q)
+    M = scores[:, :, None] * L                                          # (B,nc,H,Q,Q)
+    xdt = xh * dth[..., None].astype(xh.dtype)                          # (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M.astype(xh.dtype), xdt)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(dAc[:, :, -1:, :] - dAc)                     # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bcqn,bcqh,bcqhp->bchpn",
+        Bh, (dth * decay_to_end).astype(jnp.float32), xh.astype(jnp.float32),
+    )                                                                    # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence (fp32 scan) ----
+    chunk_decay = jnp.exp(dAc[:, :, -1, :])                              # (B,nc,H)
+    s0 = (
+        init_state["ssm"].astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((B, H, P, N), jnp.float32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp                                                    # (B,H,P,N),(B,H)
+        prev = carry
+        return prev * dec[..., None, None] + st, prev
+
+    (final, prevs) = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prevs, 0, 1)                              # (B,nc,H,P,N)
+
+    # ---- inter-chunk output: y_off[i] = C_i . (prev_state * decay_from_start) ----
+    decay_in = jnp.exp(dAc)                                              # (B,nc,Q,H)
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", Ch, prev_states, decay_in
+    ).astype(xh.dtype)
+
+    y = (y_diag + y_off).reshape(B, Sp, H, P)[:, :S]
+    y = y + xs.reshape(B, Sp, H, P)[:, :S] * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    state = {
+        "ssm": final.astype(jnp.float32),
+        "conv": jnp.pad(
+            conv_tail, ((0, 0), (max(0, cfg.ssm_conv - 1 - S), 0), (0, 0))
+        ).astype(x.dtype),
+    }
+    return constrain(out, "batch", "seq", None), state
+
+
+def ssd_decode(p, x, cfg: ArchConfig, state):
+    """One-token recurrent step.  x: (B, 1, D); state: {ssm (B,H,P,N) fp32,
+    conv (B, k-1, conv_dim)} -> (y (B,1,D), new state)."""
+    B, _, D = x.shape
+    di, H, P, N, conv_dim = _dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+
+    hist = jnp.concatenate([state["conv"], xbc], axis=1)                 # (B,k,Cd)
+    w = p["conv_w"].astype(x.dtype)
+    conv = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(x.dtype)
+    xbc1 = jax.nn.silu(conv)[:, None, :]
+    xs, Bc, Cc = jnp.split(xbc1, [di, di + N], axis=-1)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt1 * A)                                               # (B,H)
+    xh = xs[:, 0].reshape(B, H, P).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt1, xh, Bc[:, 0].astype(jnp.float32))
+    new_ssm = state["ssm"] * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), new_ssm)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_state = {"ssm": new_ssm, "conv": hist[:, 1:]}
+    return out, new_state

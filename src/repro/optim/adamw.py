@@ -1,0 +1,64 @@
+"""AdamW from scratch (no optax): decoupled weight decay, global-norm clip,
+bias correction, configurable moment dtype (bf16 moments for llama3-405b)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, dt), p)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+    def moment_specs(self, spec_tree):
+        """PSpec tree for the moments (same logical axes as params)."""
+        from ..models.common import PSpec, tree_map_pspec
+        def f(_, p):
+            return PSpec(p.shape, p.logical, init="zeros", dtype=self.moment_dtype)
+        return tree_map_pspec(f, spec_tree)
+
+    def update(self, grads, state: AdamWState, params):
+        cnt = state.count + 1
+        lr = self.lr(cnt) if callable(self.lr) else self.lr
+        # global-norm clip in fp32
+        leaves = jax.tree.leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+        bc1 = 1.0 - self.b1 ** cnt.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** cnt.astype(jnp.float32)
+        dt = jnp.dtype(self.moment_dtype)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m2 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v2 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            step = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * step
+            return p2.astype(p.dtype), m2.astype(dt), v2.astype(dt)
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamWState(cnt, new_m, new_v), gn

@@ -1,0 +1,38 @@
+"""Learning-rate schedules: warmup+cosine, and WSD (warmup-stable-decay,
+MiniCPM's schedule [arXiv:2404.06395] -- minicpm-2b trains with this)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor_frac: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        wu = peak * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup, wu, cos)
+    return lr
+
+
+def wsd(peak: float, warmup: int, total: int, decay_frac: float = 0.1,
+        floor_frac: float = 0.01):
+    """Warmup -> Stable (constant peak) -> Decay (last decay_frac of steps,
+    exponential-ish linear drop to floor)."""
+    decay_start = int(total * (1.0 - decay_frac))
+
+    def lr(step):
+        s = step.astype(jnp.float32)
+        wu = peak * s / max(warmup, 1)
+        t = jnp.clip((s - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        dec = peak * jnp.exp(jnp.log(floor_frac) * t)  # geometric decay to floor
+        stable = jnp.full_like(s, peak)
+        out = jnp.where(s < warmup, wu, jnp.where(s < decay_start, stable, dec))
+        return out
+    return lr
+
+
+def for_config(schedule: str, peak: float, warmup: int, total: int):
+    if schedule == "wsd":
+        return wsd(peak, warmup, total)
+    return warmup_cosine(peak, warmup, total)

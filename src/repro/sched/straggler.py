@@ -1,0 +1,65 @@
+"""Straggler mitigation: observe per-class step times, detect degradation via
+EWMA drift, feed degraded costs back into CEFT-CPOP and re-plan.
+
+This is the paper's heterogeneity story running *online*: a fleet that was
+homogeneous at launch becomes heterogeneous when a slice degrades (thermal
+throttling, a flaky ICI link, a preempted host).  CEFT's class-view cost model
+absorbs the measurement directly (scale the class's comp column), and the
+re-planned CEFT-CPOP schedule routes critical-path work away from the slow
+class -- with vectorized/batched CEFT (ceft_jax) cheap enough to run inside
+the training loop's control plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import ceft, ceft_cpop
+from ..core.machine import Machine
+from ..core.taskgraph import TaskGraph
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    device_class: int
+    slowdown: float
+    old_makespan: float
+    new_makespan: float
+
+
+class StragglerMonitor:
+    """EWMA per device class; replan when a class drifts > threshold."""
+
+    def __init__(self, n_classes: int, alpha: float = 0.2, threshold: float = 1.3):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ewma = np.ones(n_classes) * np.nan
+        self.baseline = np.ones(n_classes) * np.nan
+        self.events: list[StragglerEvent] = []
+
+    def observe(self, class_times: np.ndarray) -> np.ndarray:
+        """Update EWMAs; returns per-class slowdown factors (>= 1)."""
+        new = np.isnan(self.ewma)
+        self.ewma = np.where(new, class_times,
+                             self.alpha * class_times + (1 - self.alpha) * self.ewma)
+        self.baseline = np.where(np.isnan(self.baseline), self.ewma,
+                                 np.minimum(self.baseline, self.ewma))
+        return np.maximum(self.ewma / self.baseline, 1.0)
+
+    def maybe_replan(self, step: int, g: TaskGraph, comp: np.ndarray, m: Machine,
+                     class_times: np.ndarray):
+        """Returns (schedule, event|None).  Schedules with degraded costs when
+        any class trips the threshold; otherwise schedules with nominal costs."""
+        slow = self.observe(class_times)
+        if (slow < self.threshold).all():
+            return None, None
+        degraded = comp * slow[None, :]
+        base = ceft_cpop(g, comp, m, ceft(g, comp, m))
+        new = ceft_cpop(g, degraded, m, ceft(g, degraded, m))
+        worst = int(np.argmax(slow))
+        ev = StragglerEvent(step, worst, float(slow[worst]),
+                            float(base.makespan), float(new.makespan))
+        self.events.append(ev)
+        return new, ev

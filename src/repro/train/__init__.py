@@ -1,0 +1,2 @@
+from .trainer import Trainer, TrainerConfig, SimulatedFailure
+__all__ = ["Trainer", "TrainerConfig", "SimulatedFailure"]

@@ -1,0 +1,30 @@
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# keep hypothesis fast on the 1-core CI box
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_random_dag(n, p_edge, rng, data_range=(0.5, 5.0)):
+    """Random DAG over topologically-ordered ids; every non-root vertex gets
+    at least one parent so level-0 is the only source frontier."""
+    from repro.core import from_edges
+
+    edges = []
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < p_edge:
+                edges.append((i, j, float(rng.uniform(*data_range))))
+    have_parent = {d for _, d, _ in edges}
+    for j in range(1, n):
+        if j not in have_parent:
+            i = int(rng.integers(0, j))
+            edges.append((i, j, float(rng.uniform(*data_range))))
+    return from_edges(n, edges)

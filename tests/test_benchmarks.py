@@ -1,0 +1,54 @@
+"""Benchmark-harness smoke: each suite runs end-to-end at tiny scale and
+emits well-formed CSV (guards the reproduction tooling itself)."""
+import io
+import os
+from contextlib import redirect_stdout
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def tiny_scale(monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_SCALE", "0.02")
+
+
+def _capture(fn, *a, **k):
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        fn(*a, **k)
+    out = buf.getvalue().strip().splitlines()
+    assert len(out) >= 2, out
+    header = out[0].split(",")
+    for line in out[1:]:
+        assert len(line.split(",")) == len(header), line
+    return out
+
+
+def test_table3_csv():
+    from benchmarks import table3
+    out = _capture(table3.run, n_experiments=50)
+    assert any("table3" in l for l in out[1:])
+
+
+def test_sweeps_csv():
+    from benchmarks import sweeps
+    out = _capture(sweeps.run, n_rep=50)
+    assert any("fig10" in l for l in out)
+
+
+def test_realworld_csv():
+    from benchmarks import realworld
+    out = _capture(realworld.run, n_rep=50)
+    assert any("fig15_18" in l for l in out)
+
+
+def test_summarize_roundtrip(tmp_path):
+    from benchmarks import table3, summarize
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        table3.run(n_experiments=50)
+    p = tmp_path / "bench.csv"
+    p.write_text(buf.getvalue())
+    rows = summarize.load(str(p))
+    md = summarize.table3(rows)
+    assert "| classic | CPL |" in md

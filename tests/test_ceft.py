@@ -1,0 +1,136 @@
+"""CEFT correctness: the paper's invariants, cross-implementation agreement,
+and reductions to classical longest paths."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ceft,
+    ceft_reference,
+    chain_cost,
+    from_edges,
+    linear_chain,
+    min_comp_critical_path,
+    random_machine,
+    uniform_machine,
+)
+from repro.core.bruteforce import bruteforce_cpl, chain_optimal_cost, all_paths
+from repro.core.ceft_jax import ceft_jax
+from conftest import make_random_dag
+
+
+def _workload(seed, n_max=8, p_max=4):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, n_max))
+    P = int(rng.integers(1, p_max))
+    g = make_random_dag(n, 0.4, rng)
+    comp = rng.uniform(1, 10, size=(n, P))
+    m = random_machine(P, rng, bw_range=(0.5, 2.0), L_range=(0.0, 1.0))
+    return g, comp, m
+
+
+@given(st.integers(0, 10_000))
+def test_vectorized_matches_reference(seed):
+    g, comp, m = _workload(seed)
+    a = ceft_reference(g, comp, m)
+    b = ceft(g, comp, m)
+    np.testing.assert_allclose(a.ceft, b.ceft, rtol=1e-12)
+    assert a.cpl == pytest.approx(b.cpl)
+    assert a.path == b.path
+
+
+@given(st.integers(0, 10_000))
+def test_jax_matches_numpy(seed):
+    g, comp, m = _workload(seed)
+    a = ceft(g, comp, m)
+    b = ceft_jax(g, comp, m)
+    np.testing.assert_allclose(a.ceft, b.ceft, rtol=2e-5)
+    assert b.cpl == pytest.approx(a.cpl, rel=2e-5)
+
+
+@given(st.integers(0, 10_000))
+def test_cpl_dominates_every_path_optimum(seed):
+    """CEFT >= chain-optimal cost of every source->sink path (the recurrence
+    is min-max >= max-min; §4.1)."""
+    g, comp, m = _workload(seed, n_max=7)
+    res = ceft(g, comp, m)
+    bf = bruteforce_cpl(g, comp, m)
+    assert res.cpl >= bf - 1e-9
+
+
+@given(st.integers(0, 10_000))
+def test_path_value_is_exact_chain_cost(seed):
+    """The returned path + partial assignment reproduces the claimed CPL
+    exactly (the 'mutual inclusivity' of path and partial schedule)."""
+    g, comp, m = _workload(seed)
+    res = ceft(g, comp, m)
+    assert chain_cost(res.path, g, comp, m) == pytest.approx(res.cpl, rel=1e-9)
+
+
+@given(st.integers(0, 10_000))
+def test_homogeneous_reduces_to_longest_path(seed):
+    """One processor class: CEFT == classical longest path with comm=0 (same
+    class => co-located)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 10))
+    g = make_random_dag(n, 0.3, rng)
+    comp = rng.uniform(1, 10, size=(n, 1))
+    m = uniform_machine(1)
+    res = ceft(g, comp, m)
+    lp, _ = min_comp_critical_path(g, comp)
+    assert res.cpl == pytest.approx(lp)
+
+
+@given(st.integers(0, 10_000))
+def test_free_comm_reduces_to_min_comp_longest_path(seed):
+    """Infinite bandwidth + zero startup: per-task min comp, classical DP."""
+    g, comp, _ = _workload(seed)
+    P = comp.shape[1]
+    m = uniform_machine(P, bw=1e30, L=0.0)
+    res = ceft(g, comp, m)
+    lp, _ = min_comp_critical_path(g, comp)
+    assert res.cpl == pytest.approx(lp, rel=1e-6)
+
+
+def test_linear_chain_exact():
+    """On a chain the CEFT CPL equals the exact chain DP optimum."""
+    rng = np.random.default_rng(3)
+    g = linear_chain(6, data=2.0)
+    comp = rng.uniform(1, 10, size=(6, 3))
+    m = random_machine(3, rng, L_range=(0.0, 0.5))
+    res = ceft(g, comp, m)
+    opt = chain_optimal_cost(list(range(6)), g, comp, m)
+    assert res.cpl == pytest.approx(opt)
+    assert [t for t, _ in res.path] == list(range(6))
+
+
+def test_assignment_exploits_specialization():
+    """Two task types x two specialized classes: CEFT assigns each task to its
+    fast class when comm is cheap (the paper's motivating scenario)."""
+    g = linear_chain(4, data=0.001)
+    comp = np.array([[1.0, 100.0], [100.0, 1.0], [1.0, 100.0], [100.0, 1.0]])
+    m = uniform_machine(2, bw=1e6)
+    res = ceft(g, comp, m)
+    assert [p for _, p in res.path] == [0, 1, 0, 1]
+    assert res.cpl == pytest.approx(4.0, abs=0.1)
+
+
+def test_single_processor_pinning_when_comm_dominates():
+    """Huge comm costs: the optimal chain stays on one class."""
+    g = linear_chain(4, data=1e9)
+    rng = np.random.default_rng(0)
+    comp = rng.uniform(1, 3, size=(4, 3))
+    m = uniform_machine(3, bw=1.0)
+    res = ceft(g, comp, m)
+    classes = {p for _, p in res.path}
+    assert len(classes) == 1
+    assert res.cpl == pytest.approx(comp[:, list(classes)[0]].sum())
+
+
+def test_multiple_sinks_takes_longest():
+    edges = [(0, 1, 1.0), (0, 2, 1.0)]
+    g = from_edges(3, edges)
+    comp = np.array([[1.0], [5.0], [2.0]])
+    res = ceft(g, comp, uniform_machine(1))
+    assert res.cpl == pytest.approx(6.0)
+    assert res.sink == 1

@@ -1,0 +1,36 @@
+"""Dry-run machinery test: subprocess with a small fake fleet compiles smoke
+cells on single- and multi-pod meshes and emits complete analysis records."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+CASES = [
+    ("granite-3-8b", "train_4k", "single"),
+    ("mixtral-8x22b", "decode_32k", "multi"),
+    ("mamba2-2.7b", "long_500k", "multi"),
+    ("whisper-tiny", "prefill_32k", "single"),
+]
+
+
+@pytest.mark.parametrize("arch,cell,mesh", CASES)
+def test_dryrun_smoke_cell(arch, cell, mesh, tmp_path):
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--cell", cell, "--mesh", mesh, "--smoke", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=420,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads((tmp_path / f"{arch}__{cell}__{mesh}.json").read_text())
+    assert rec["ok"], rec.get("error")
+    assert rec["cost_analysis"]["flops"] > 0
+    assert rec["memory_analysis"]["argument_size_in_bytes"] > 0
+    assert "collective_bytes" in rec["collectives"]

@@ -1,0 +1,75 @@
+"""Elastic scaling: train on a (4,2) mesh of 8 fake devices, checkpoint, then
+restore onto a *shrunk* (2,2) mesh (simulating losing half the fleet) and
+continue training with identical loss trajectory.
+
+Runs in a subprocess because the fake-device count must be set before jax
+initializes (the main test process keeps the single real CPU device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    import repro.configs as C
+    from repro.configs.base import ShapeCell
+    from repro.train import Trainer, TrainerConfig
+
+    cell = ShapeCell("smoke", seq_len=32, global_batch=8, kind="train")
+    cfg = C.get("minicpm-2b", smoke=True)
+    devs = np.array(jax.devices())
+
+    def big_mesh():
+        return Mesh(devs[:8].reshape(4, 2), ("data", "model"))
+
+    def small_mesh():
+        return Mesh(devs[:4].reshape(2, 2), ("data", "model"))
+
+    ckpt = os.environ["CKPT_DIR"]
+    # phase 1: 6 steps on the big mesh, checkpoint every 3
+    t1 = Trainer(cfg, cell, TrainerConfig(steps=6, ckpt_every=3, ckpt_dir=ckpt,
+                                          log_every=1), big_mesh)
+    m1 = t1.run()
+    # reference run: same seed, 10 steps, big mesh throughout
+    t_ref = Trainer(cfg, cell, TrainerConfig(steps=10, ckpt_every=100,
+                                             ckpt_dir=ckpt + "_ref",
+                                             log_every=1), big_mesh)
+    ref = {m["step"]: m["loss"] for m in t_ref.run() if "loss" in m}
+
+    # phase 2: restore the step-6 checkpoint onto the SHRUNK mesh, continue
+    t2 = Trainer(cfg, cell, TrainerConfig(steps=10, ckpt_every=100,
+                                          ckpt_dir=ckpt, log_every=1), small_mesh)
+    p_like, o_like = t2._fresh_state()
+    start, tree = t2._restore_latest(p_like, o_like)
+    assert start == 7, start
+    params, opt = tree["params"], tree["opt"]
+    import jax.numpy as jnp
+    for step in range(7, 11):
+        batch = t2.data.sharded_batch(step - 1, t2.in_sh)
+        with jax.set_mesh(t2.mesh):
+            params, opt, m = t2.step_fn(params, opt, batch)
+        loss = float(m["loss"])
+        r = ref[step]
+        # cross-mesh reduction order shifts fp32 sums ~0.3%; same-mesh
+        # exactness is asserted in test_recovery_reproduces_unfailed_run
+        assert abs(loss - r) / abs(r) < 2e-2, (step, loss, r)
+    print("ELASTIC_OK")
+""")
+
+
+def test_elastic_reshard(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["CKPT_DIR"] = str(tmp_path / "ck")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=500)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ELASTIC_OK" in r.stdout

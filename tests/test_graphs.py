@@ -1,0 +1,91 @@
+"""Workload generators: structure invariants and the paper's exact counts."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.graphs import (
+    epigenomics,
+    fft_graph,
+    gaussian_elimination,
+    molecular_dynamics,
+    rgg,
+)
+from repro.graphs.rgg import INTERVALS, classic_workload, interval_workload
+
+
+@given(st.integers(0, 1000), st.sampled_from(["classic", "low", "medium", "high"]))
+def test_rgg_structure(seed, kind):
+    rng = np.random.default_rng(seed)
+    n = int(rng.choice([32, 64, 128]))
+    P = int(rng.choice([2, 4, 8]))
+    wl = rgg(kind, n, P, rng, o=4, c=1.0,
+             alpha=float(rng.choice([0.25, 0.75, 1.0])),
+             beta=float(rng.choice([10, 50, 95])),
+             gamma=float(rng.choice([0.1, 0.5])))
+    g = wl.graph
+    assert g.n == n
+    assert wl.comp.shape == (n, P)
+    assert (wl.comp > 0).all()
+    # every non-level-0 vertex has a parent (connectivity invariant)
+    assert (g.in_degree[g.level > 0] > 0).all()
+    # edge data all positive
+    assert (g.cdata > 0).all()
+
+
+def test_classic_heterogeneity_bound():
+    """eq. (5): w_ij in w_i * [1 - b/2, 1 + b/2] -- at most 3x spread."""
+    rng = np.random.default_rng(0)
+    wl = rgg("classic", 128, 8, rng, beta=95.0)
+    ratio = wl.comp.max(axis=1) / wl.comp.min(axis=1)
+    assert (ratio <= 3.0 + 1e-9).all()
+
+
+def test_interval_heterogeneity_grows():
+    """RGG-high expresses (much) more heterogeneity than RGG-low."""
+    rng = np.random.default_rng(0)
+    lo = rgg("low", 256, 8, rng, beta=50.0)
+    hi = rgg("high", 256, 8, rng, beta=50.0)
+    r_lo = np.median(lo.comp.max(axis=1) / lo.comp.min(axis=1))
+    r_hi = np.median(hi.comp.max(axis=1) / hi.comp.min(axis=1))
+    assert r_hi > 2 * r_lo
+
+
+@pytest.mark.parametrize("m,expected", [(5, 14), (8, 35), (10, 54)])
+def test_gaussian_elimination_count(m, expected):
+    """(m^2 + m - 2) / 2 tasks (paper §7.2.2; m=5 -> 14 as in Fig. 3a)."""
+    g = gaussian_elimination(m)
+    assert g.n == expected
+    assert len(g.sources) == 1 and len(g.sinks) == 1
+
+
+@pytest.mark.parametrize("m", [4, 8, 16])
+def test_fft_counts(m):
+    """2m-1 recursive calls + m*log2(m) butterflies (paper §7.2.1)."""
+    g = fft_graph(m)
+    lg = int(np.log2(m))
+    assert g.n == 2 * m - 1 + m * lg
+    assert len(g.sources) == 1
+    assert len(g.sinks) == m
+
+
+def test_fft_all_paths_equal_length():
+    """'All the paths in this application are the critical-path' (§7.2.1)."""
+    g = fft_graph(8)
+    from repro.core.bruteforce import all_paths
+    lengths = {len(p) for p in all_paths(g)}
+    assert len(lengths) == 1
+
+
+def test_molecular_dynamics_fixed():
+    g = molecular_dynamics()
+    assert g.n == 41
+    assert g.n_edges > 60  # irregular, dense-ish
+
+
+@pytest.mark.parametrize("B", [4, 8])
+def test_epigenomics_structure(B):
+    g = epigenomics(B)
+    assert g.n == 4 * B + 4
+    assert len(g.sources) == 1 and len(g.sinks) == 1
+    # wide & shallow: B parallel 4-chains
+    assert g.n_levels == 8  # split + 4 stages + merge + index + pileup

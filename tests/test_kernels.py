@@ -1,0 +1,99 @@
+"""Pallas kernel validation: interpret-mode execution against the pure-jnp
+oracles across shape/dtype sweeps + semiring properties + end-to-end CEFT."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ceft_relax, minplus, pallas_relax
+from repro.kernels.ref import ceft_relax_ref, minplus_ref
+
+SHAPES_MINPLUS = [(4, 3, 5), (128, 16, 128), (300, 37, 260), (1, 1, 1),
+                  (257, 129, 255), (16, 256, 16)]
+
+
+@pytest.mark.parametrize("shape", SHAPES_MINPLUS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_minplus_matches_ref(shape, dtype):
+    m, k, n = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    a = jnp.asarray(rng.uniform(-5, 5, (m, k)), dtype)
+    b = jnp.asarray(rng.uniform(-5, 5, (k, n)), dtype)
+    got = minplus(a, b)
+    want = minplus_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15)
+def test_minplus_semiring_properties(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 20))
+    a = jnp.asarray(rng.uniform(-5, 5, (n, n)), jnp.float32)
+    # identity: I with 0 on diag, +inf off-diag
+    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, 3.0e38)
+    np.testing.assert_allclose(minplus(a, eye), a, rtol=1e-6)
+    np.testing.assert_allclose(minplus(eye, a), a, rtol=1e-6)
+    # associativity (in fp32 exact: min/plus of same values)
+    b = jnp.asarray(rng.uniform(-5, 5, (n, n)), jnp.float32)
+    c = jnp.asarray(rng.uniform(-5, 5, (n, n)), jnp.float32)
+    left = minplus(minplus(a, b), c)
+    right = minplus(a, minplus(b, c))
+    np.testing.assert_allclose(left, right, rtol=1e-5, atol=1e-4)
+
+
+CELL_SHAPES = [(8, 3, 4), (5, 1, 2), (16, 7, 13), (33, 9, 64), (64, 2, 128), (1, 1, 1)]
+
+
+@pytest.mark.parametrize("shape", CELL_SHAPES)
+def test_ceft_relax_matches_ref(shape):
+    W, D, P = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    pv = jnp.asarray(rng.uniform(0, 100, (W, D, P)), jnp.float32)
+    pdata = jnp.asarray(rng.uniform(0, 10, (W, D)), jnp.float32)
+    validp = jnp.asarray(rng.random((W, D)) < 0.8, jnp.float32)
+    L = jnp.asarray(rng.uniform(0, 2, (P,)), jnp.float32)
+    bw = jnp.asarray(rng.uniform(0.5, 2, (P, P)), jnp.float32)
+    got = ceft_relax(pv, pdata, validp, L, bw)
+    want = ceft_relax_ref(pv, pdata, validp, L, bw)
+    for g, w, name in zip(got, want, ["maxk", "argk", "argl"]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10)
+def test_ceft_jax_with_pallas_relax_end_to_end(seed):
+    """The full DP sweep with the Pallas kernel plugged in reproduces the
+    numpy Algorithm-1 results (values and the backtracked path)."""
+    from repro.core import ceft, random_machine
+    from repro.core.ceft_jax import ceft_jax
+    from conftest import make_random_dag
+
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 10))
+    P = int(rng.integers(1, 5))
+    g = make_random_dag(n, 0.4, rng)
+    comp = rng.uniform(1, 10, size=(n, P))
+    m = random_machine(P, rng, L_range=(0.0, 1.0))
+    a = ceft(g, comp, m)
+    b = ceft_jax(g, comp, m, relax=pallas_relax)
+    np.testing.assert_allclose(b.ceft, a.ceft, rtol=2e-5)
+    assert b.cpl == pytest.approx(a.cpl, rel=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(8, 3, 4), (16, 7, 13)])
+def test_ceft_relax_bf16(shape):
+    """bf16 kernel path agrees with the bf16 oracle (TPU's native dtype)."""
+    W, D, P = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    pv = jnp.asarray(rng.uniform(0, 100, (W, D, P)), jnp.bfloat16)
+    pdata = jnp.asarray(rng.uniform(0, 10, (W, D)), jnp.bfloat16)
+    validp = jnp.asarray(rng.random((W, D)) < 0.8, jnp.bfloat16)
+    L = jnp.asarray(rng.uniform(0, 2, (P,)), jnp.bfloat16)
+    bw = jnp.asarray(rng.uniform(0.5, 2, (P, P)), jnp.bfloat16)
+    got = ceft_relax(pv, pdata, validp, L, bw)
+    want = ceft_relax_ref(pv, pdata, validp, L, bw)
+    np.testing.assert_allclose(np.asarray(got[0], np.float32),
+                               np.asarray(want[0], np.float32), rtol=1e-2)

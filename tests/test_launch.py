@@ -1,0 +1,96 @@
+"""Launch-layer units: HLO collective parser, sharding resolution with
+divisibility degradation + profiles, input specs for every cell."""
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as C
+from repro.configs.base import SHAPES, cells_for
+from repro.launch.hlo_stats import collective_stats, _shape_bytes
+from repro.models.common import (
+    LOGICAL_RULES,
+    resolve_spec,
+    set_sharding_profile,
+)
+from repro.models.model import build
+
+HLO = """\
+HloModule jit_f
+
+%body.10 (arg: (s32[], f32[128,64])) -> (s32[], f32[128,64]) {
+  %ag.1 = f32[128,64]{1,0} all-gather(f32[8,64]{1,0} %p), replica_groups={}, dimensions={0}
+  %ar.1 = f32[128]{0} all-reduce(f32[128]{0} %x), to_apply=%sum.5
+}
+
+%cond.11 (arg: (s32[], f32[128,64])) -> pred[] {
+  %c = s32[] constant(7)
+  %lt = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+
+ENTRY %main.42 (p0: f32[8,64]) -> f32[128,64] {
+  %w = (s32[], f32[128,64]) while((s32[], f32[128,64]) %t), condition=%cond.11, body=%body.10
+  %ag.2 = bf16[256]{0} all-gather(bf16[16]{0} %q), dimensions={0}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,64]{1,0} all-gather(...)") == 128 * 64 * 4
+    assert _shape_bytes("bf16[256]{0}") == 512
+    assert _shape_bytes("pred[] compare") == 0 or _shape_bytes("pred[]") >= 0
+
+
+def test_collective_stats_weights_while_loops():
+    st = collective_stats(HLO, n_devices=4)
+    # body collectives x trip count 7 (+ all-reduce factor 2) + entry all-gather
+    expect = 7 * (128 * 64 * 4 + 2 * 128 * 4) + 256 * 2
+    assert st["collective_bytes_per_device"] == pytest.approx(expect)
+    assert st["op_counts"]["all-gather"] == 2
+    assert st["op_counts"]["all-reduce"] == 1
+    # flat (structural) sum counts the body once
+    flat = (128 * 64 * 4 + 2 * 128 * 4 + 256 * 2) * 4
+    assert st["collective_bytes_flat"] == pytest.approx(flat)
+
+
+def test_resolve_spec_degradation():
+    ms = {"data": 16, "model": 16}
+    # divisible: shards; non-divisible: drops
+    s = resolve_spec((128, 4096), ("heads", "ffn"), ms)
+    assert s[0] == "model" or s[1] == "model"
+    s2 = resolve_spec((36, 64), ("heads", "none"), ms)
+    assert s2[0] is None  # 36 % 16 != 0 -> replicated
+    # no axis used twice
+    s3 = resolve_spec((256, 256), ("heads", "ffn"), ms)
+    used = [x for x in s3 if x is not None]
+    assert len(set(used)) == len(used)
+
+
+def test_profile_switching_roundtrip():
+    set_sharding_profile("serve")
+    assert LOGICAL_RULES["batch"] == ()
+    assert LOGICAL_RULES["qkv"] == ("model", "data")
+    set_sharding_profile("baseline")
+    assert LOGICAL_RULES["batch"] == ("pod", "data")
+    assert LOGICAL_RULES["qkv"] == ("model",)
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_input_specs_cover_all_cells(arch):
+    cfg = C.get(arch)
+    model = build(cfg)
+    for cell_name in cells_for(cfg):
+        cell = SHAPES[cell_name]
+        specs = model.input_specs(cell)
+        assert specs, (arch, cell_name)
+        for k, v in specs.items():
+            assert all(d > 0 for d in v.shape), (arch, cell_name, k)
+        if cell.kind == "train":
+            assert "labels" in specs
+        if cell.kind == "decode":
+            assert specs["tokens"].shape[1] == 1
+            assert "pos" in specs
+
+
+def test_cells_for_skip_list():
+    """long_500k only for sub-quadratic mixers (DESIGN.md skip list)."""
+    runs_long = {a for a in C.ARCHS if "long_500k" in cells_for(C.get(a))}
+    assert runs_long == {"jamba-v0.1-52b", "mixtral-8x22b", "mamba2-2.7b"}

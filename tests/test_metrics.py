@@ -1,0 +1,78 @@
+"""Metric correctness on hand-computed schedules (paper §7.3) and task-graph
+structural properties."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Machine,
+    Schedule,
+    ceft,
+    from_edges,
+    linear_chain,
+    slack,
+    slr,
+    speedup,
+    uniform_machine,
+)
+from repro.core.schedule import sequential_time
+
+
+def test_metrics_hand_computed():
+    """Chain 0->1->2, data=1, two identical classes, bw=1, L=0.
+    comp = [[2,2],[3,3],[1,1]].  Schedule all on proc 0: makespan 6."""
+    g = linear_chain(3, data=1.0)
+    comp = np.array([[2.0, 2.0], [3.0, 3.0], [1.0, 1.0]])
+    m = uniform_machine(2)
+    s = Schedule(proc=np.zeros(3, np.int64),
+                 start=np.array([0.0, 2.0, 5.0]),
+                 finish=np.array([2.0, 5.0, 6.0]))
+    assert s.makespan == 6.0
+    # sequential time = min over procs of total = 6 -> speedup 1
+    assert sequential_time(comp, m) == 6.0
+    assert speedup(s, comp, m) == pytest.approx(1.0)
+    # CP_MIN = sum of per-task min comp = 6 -> SLR 1
+    assert slr(s, g, comp) == pytest.approx(1.0)
+    # chain: zero slack everywhere (t_level + b_level == M for all tasks)
+    assert slack(s, g, comp, m) == pytest.approx(0.0)
+
+
+def test_slack_positive_for_parallel_branch():
+    """Diamond 0->{1,2}->3 where branch 2 is much shorter: it has slack."""
+    g = from_edges(4, [(0, 1, 0.0), (0, 2, 0.0), (1, 3, 0.0), (2, 3, 0.0)])
+    comp = np.array([[1.0], [10.0], [1.0], [1.0]])
+    m = uniform_machine(1, counts=[2])
+    s = Schedule(proc=np.array([0, 0, 1, 0]),
+                 start=np.array([0.0, 1.0, 1.0, 11.0]),
+                 finish=np.array([1.0, 11.0, 2.0, 12.0]))
+    assert slack(s, g, comp, m) > 0
+
+
+def test_transpose_preserves_ceft_on_symmetric_costs():
+    """CEFT on G and G^T with uniform comm finds the same CPL for a chain
+    (path reversal symmetry)."""
+    rng = np.random.default_rng(0)
+    g = linear_chain(5, data=1.0)
+    comp = rng.uniform(1, 5, size=(5, 3))
+    m = uniform_machine(3, bw=2.0)
+    a = ceft(g, comp, m)
+    gt = g.transpose()
+    b = ceft(gt, comp[::-1], m)
+    assert a.cpl == pytest.approx(b.cpl)
+
+
+def test_padded_level_tables_roundtrip():
+    from repro.core import padded_level_tables
+    g = from_edges(5, [(0, 2, 1.0), (1, 2, 2.0), (2, 3, 3.0), (1, 4, 4.0)])
+    t = padded_level_tables(g)
+    assert t["tasks"].shape[0] == g.n_levels
+    # every real task appears exactly once
+    real = t["tasks"][t["tasks"] >= 0]
+    assert sorted(real.tolist()) == list(range(5))
+    # parent data matches the graph
+    for li in range(t["tasks"].shape[0]):
+        for wi, task in enumerate(t["tasks"][li]):
+            if task < 0:
+                continue
+            ps = t["par"][li, wi]
+            real_ps = ps[ps >= 0]
+            assert sorted(real_ps.tolist()) == sorted(g.parents(int(task)).tolist())

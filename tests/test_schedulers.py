@@ -1,0 +1,96 @@
+"""Scheduler validity and metric properties for HEFT / CPOP / CEFT-CPOP and
+the CEFT-HEFT rank variants."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (
+    ceft,
+    ceft_cpop,
+    ceft_heft_down,
+    ceft_heft_up,
+    cpop,
+    heft,
+    heft_down,
+    min_comp_critical_path,
+    random_machine,
+    slack,
+    slr,
+    speedup,
+    validate_schedule,
+)
+from repro.core.cpop import cpop_cpl
+from conftest import make_random_dag
+
+ALGOS = [heft, heft_down, cpop, ceft_cpop, ceft_heft_up, ceft_heft_down]
+
+
+def _workload(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 24))
+    P = int(rng.integers(1, 5))
+    g = make_random_dag(n, 0.3, rng)
+    comp = rng.uniform(1, 10, size=(n, P))
+    counts = rng.integers(1, 3, size=P)
+    m = random_machine(P, rng, counts=counts, L_range=(0.0, 0.5))
+    return g, comp, m
+
+
+@given(st.integers(0, 10_000))
+def test_schedules_are_valid(seed):
+    g, comp, m = _workload(seed)
+    for algo in ALGOS:
+        s = algo(g, comp, m)
+        validate_schedule(s, g, comp, m)
+
+
+@given(st.integers(0, 10_000))
+def test_metric_invariants(seed):
+    g, comp, m = _workload(seed)
+    cp_min, _ = min_comp_critical_path(g, comp)
+    for algo in ALGOS:
+        s = algo(g, comp, m)
+        assert s.makespan >= cp_min - 1e-9          # CP_MIN is a lower bound
+        assert slr(s, g, comp) >= 1.0 - 1e-9        # eq. 9
+        assert speedup(s, comp, m) > 0
+        assert slack(s, g, comp, m) >= -1e-6         # eq. 10 is non-negative
+
+
+@given(st.integers(0, 10_000))
+def test_makespan_dominates_ceft_cpl_modulo_availability(seed):
+    """CEFT's CPL is a dependence-only lower bound: any schedule of the graph
+    on the machine must take at least ... NOTE: CEFT assumes task duplication,
+    so it can undercut a no-duplication schedule but never exceed the
+    CEFT-CPOP realized makespan."""
+    g, comp, m = _workload(seed)
+    res = ceft(g, comp, m)
+    s = ceft_cpop(g, comp, m, res)
+    assert s.makespan >= res.cpl * 0.999 or s.makespan >= res.cpl - 1e-6
+
+
+def test_cpop_cpl_is_single_proc_sum():
+    rng = np.random.default_rng(1)
+    g = make_random_dag(10, 0.3, rng)
+    comp = rng.uniform(1, 10, size=(10, 3))
+    m = random_machine(3, rng)
+    v = cpop_cpl(g, comp, m)
+    # must equal some column-sum over a path's tasks: at minimum it is
+    # >= (min column sum over any single task) and <= sum of max costs
+    assert 0 < v <= comp.max(axis=1).sum()
+
+
+def test_specialization_scenario_ceft_cpop_beats_cpop():
+    """Bimodal tasks on specialized classes with cheap comm: pinning the CP to
+    one processor (CPOP) pays the mismatch penalty; CEFT-CPOP does not."""
+    rng = np.random.default_rng(0)
+    n = 12
+    from repro.core import from_edges
+    g = from_edges(n, [(i, i + 1, 1e-6) for i in range(n - 1)])
+    comp = np.empty((n, 2))
+    comp[::2] = [1.0, 50.0]
+    comp[1::2] = [50.0, 1.0]
+    m = random_machine(2, rng, bw_range=(1e5, 1e6))
+    mk_ours = ceft_cpop(g, comp, m).makespan
+    mk_cpop = cpop(g, comp, m).makespan
+    assert mk_ours < mk_cpop
+    assert mk_ours == pytest.approx(n * 1.0, rel=0.2)
