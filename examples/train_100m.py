@@ -21,12 +21,26 @@ CFG_100M = ArchConfig(
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
     ap.add_argument("--ckpt", default="/tmp/repro_100m_ckpt")
     ap.add_argument("--fail-at", type=int, default=0,
                     help="simulate a node failure at this step")
+    ap.add_argument("--smoke", action="store_true",
+                    help="~2M-param model: same code path, finishes in "
+                         "seconds on a 1-core CPU box")
     args = ap.parse_args()
+
+    cfg = CFG_100M
+    if args.smoke:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, name="demo-smoke", n_layers=2,
+                                  d_model=256, n_heads=4, n_kv_heads=4,
+                                  d_ff=512, vocab=2048)
+        args.steps = min(args.steps, 20)
+    # explicit --seq/--batch always win; otherwise scale-appropriate defaults
+    args.seq = args.seq or (64 if args.smoke else 256)
+    args.batch = args.batch or (4 if args.smoke else 8)
 
     cell = ShapeCell("train_demo", seq_len=args.seq, global_batch=args.batch,
                      kind="train")
@@ -35,10 +49,10 @@ def main():
         log_every=10, peak_lr=3e-4,
         fail_at_steps=(args.fail_at,) if args.fail_at else (),
     )
-    n = CFG_100M.n_params()
+    n = cfg.n_params()
     print(f"model: {n/1e6:.1f}M params, {args.steps} steps, "
           f"{args.batch}x{args.seq} tokens/step")
-    tr = Trainer(CFG_100M, cell, tcfg, make_test_mesh)
+    tr = Trainer(cfg, cell, tcfg, make_test_mesh)
     metrics = tr.run()
     losses = [m for m in metrics if "loss" in m]
     events = [m for m in metrics if "event" in m]

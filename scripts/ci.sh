@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 CI: optional dev deps, the test suite, and the substrate choke-point
+# invariant (no raw version-sensitive mesh APIs outside src/repro/substrate/).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# optional dev deps -- the suite must also pass without them (property tests
+# auto-skip via tests/_hyp.py), so a failed install is not an error
+if command -v pip >/dev/null 2>&1; then
+    pip install --quiet hypothesis 2>/dev/null \
+        || echo "ci: hypothesis unavailable, property tests will skip"
+fi
+
+echo "ci: forbidden-API grep (version-sensitive mesh calls outside substrate)"
+# bare names too, so `from jax import set_mesh` can't sneak past; shard_map
+# is matched only as a jax import/attribute since `from ..substrate import
+# shard_map` is the sanctioned spelling
+violations=$(grep -rnE "set_mesh|use_mesh|AxisType|get_abstract_mesh|jax\.shard_map|from jax import .*shard_map|jax\.experimental.*shard_map" \
+    src/ --include='*.py' | grep -v "^src/repro/substrate/" || true)
+if [ -n "$violations" ]; then
+    echo "ci: FAIL -- raw mesh API outside src/repro/substrate/:"
+    echo "$violations"
+    exit 1
+fi
+echo "ci: choke-point invariant holds"
+
+echo "ci: tier-1 tests"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q

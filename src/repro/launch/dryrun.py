@@ -32,6 +32,11 @@ import numpy as np
 from .. import configs as C
 from ..models.common import tree_map_pspec, resolve_spec
 from ..models.model import build
+from ..substrate import (
+    compiled_cost_analysis,
+    make_mesh as substrate_make_mesh,
+    mesh_context,
+)
 from .hlo_stats import collective_stats
 from .mesh import mesh_axis_sizes
 from .steps import (
@@ -43,7 +48,7 @@ from .steps import (
     input_shardings,
     make_optimizer,
 )
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.sharding import NamedSharding, PartitionSpec
 
 
 def make_mesh(kind: str, smoke: bool = False):
@@ -57,10 +62,7 @@ def make_mesh(kind: str, smoke: bool = False):
     else:
         shape = (2, 16, 16) if kind == "multi" else (16, 16)
         axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
-    n = int(np.prod(shape))
-    if len(devs) < n:
-        raise RuntimeError(f"need {n} devices, have {len(devs)}")
-    return Mesh(devs[:n].reshape(shape), axes)
+    return substrate_make_mesh(shape, axes, devices=devs)
 
 
 def analytic_bytes_per_device(spec_tree, mesh, dtype_override=None) -> int:
@@ -102,7 +104,7 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, smoke: bool, out_dir: Pa
     }
     t0 = time.monotonic()
     try:
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             inputs = model.input_specs(cell)
             in_sh = input_shardings(inputs, mesh)
             if cell.kind == "train":
@@ -149,7 +151,7 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, smoke: bool, out_dir: Pa
             rec["compile_s"] = round(time.monotonic() - t1, 2)
 
             try:
-                ca = compiled.cost_analysis()
+                ca = compiled_cost_analysis(compiled)
                 rec["cost_analysis"] = {
                     k: ca[k] for k in ("flops", "bytes accessed", "transcendentals")
                     if k in ca
@@ -185,6 +187,9 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, smoke: bool, out_dir: Pa
     print(f"[{status}] {arch:16s} {cell_name:12s} {mesh_kind:6s} "
           f"lower={rec.get('lower_s', '-'):>7}s compile={rec.get('compile_s', '-'):>7}s",
           flush=True)
+    if not rec["ok"]:
+        # the traceback must reach the parent process, not just the json
+        print(rec["error"], file=sys.stderr, flush=True)
     return rec["ok"]
 
 

@@ -4,16 +4,15 @@ Defined as functions (never module-level constants) so importing this module
 never touches jax device state.  The dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax import;
 smoke tests and benches see the 1 real CPU device.
+
+All version-sensitive mesh APIs live in repro.substrate; this module only
+picks shapes.
 """
 from __future__ import annotations
 
 import jax
 
-
-def _mesh(shape, axes):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+from ..substrate import make_mesh, mesh_axis_sizes  # noqa: F401  (re-export)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,7 +20,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     (pod, data, model); the pod axis carries data parallelism over DCN."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(n_devices: int | None = None):
@@ -32,8 +31,4 @@ def make_test_mesh(n_devices: int | None = None):
         if n % cand == 0:
             model = cand
             break
-    return _mesh((n // model, model), ("data", "model"))
-
-
-def mesh_axis_sizes(mesh) -> dict[str, int]:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+    return make_mesh((n // model, model), ("data", "model"))

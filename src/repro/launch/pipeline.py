@@ -22,6 +22,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import ArchConfig
 from ..models.layers import mlp, rmsnorm, rope_cos_sin
 from ..models.transformer import _period_fwd
+from ..substrate import shard_map
 
 
 def _stage_fwd(cfg: ArchConfig, stage_params, x, cos_sin):
@@ -79,11 +80,10 @@ def pipeline_forward(cfg: ArchConfig, blocks, x, mesh, *, n_micro: int,
         contrib = contrib[n_stages - 1:]          # (n_micro, mb, S, D)
         return jax.lax.psum(contrib, axis)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(axis), P()),   # stage params sharded; inputs replicated
         out_specs=P(),
-        check_vma=False,
     )
     out = fn(staged, xm)
     return out.reshape(B, S, D)

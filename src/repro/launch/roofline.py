@@ -55,6 +55,7 @@ from ..models.layers import (
 from ..models.moe import moe, moe_specs
 from ..models.ssm import ssd_decode, ssd_prefill, ssm_specs
 from ..models.common import PSpec, abstract_params, param_shardings, resolve_spec
+from ..substrate import compiled_cost_analysis, mesh_context
 from .hlo_stats import collective_stats
 from .mesh import mesh_axis_sizes
 
@@ -84,10 +85,10 @@ def _io_bytes_per_device(args, shardings, out_avals, mesh) -> float:
 
 
 def _compile_stats(fn, args, shardings, mesh) -> dict:
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
         compiled = lowered.compile()
-    ca = compiled.cost_analysis()
+    ca = compiled_cost_analysis(compiled)
     coll = collective_stats(compiled.as_text(), mesh.devices.size)
     out_avals = jax.eval_shape(fn, *args)
     return {

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
+from ..substrate import constrain_spec, current_axis_sizes, degrade_spec
+
 # logical axis name -> preferred mesh axes (applied greedily, outermost first)
 LOGICAL_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
@@ -170,23 +172,8 @@ def abstract_params(spec_tree, param_dtype=jnp.float32):
 # ----------------------------------------------------------------- shardings
 def resolve_spec(shape: tuple[int, ...], logical: tuple[str, ...], mesh_shape: dict[str, int]) -> PartitionSpec:
     """Logical axes -> PartitionSpec with divisibility degradation."""
-    out: list[Any] = []
-    used: set[str] = set()
-    for dim, lname in zip(shape, logical):
-        axes: list[str] = []
-        size = 1
-        for ax in LOGICAL_RULES.get(lname, ()):
-            if ax in mesh_shape and ax not in used and dim % (size * mesh_shape[ax]) == 0:
-                axes.append(ax)
-                size *= mesh_shape[ax]
-        used.update(axes)
-        if not axes:
-            out.append(None)
-        elif len(axes) == 1:
-            out.append(axes[0])
-        else:
-            out.append(tuple(axes))
-    return PartitionSpec(*out)
+    cands = [LOGICAL_RULES.get(lname, ()) for lname in logical]
+    return degrade_spec(shape, cands, mesh_shape)
 
 
 def param_shardings(spec_tree, mesh: jax.sharding.Mesh):
@@ -210,9 +197,8 @@ def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
     an axis that does not divide is dropped, so every architecture compiles on
     every mesh.
     """
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or am.empty:
+    ms = current_axis_sizes()
+    if not ms:
         return x
-    ms = dict(am.shape)
     spec = resolve_spec(x.shape, tuple(l or "none" for l in logical), ms)
-    return jax.lax.with_sharding_constraint(x, spec)
+    return constrain_spec(x, spec)

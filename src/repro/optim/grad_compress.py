@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..substrate import shard_map
+
 
 def _quant(x: jnp.ndarray):
     scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
@@ -69,6 +71,5 @@ def compressed_psum(x: jnp.ndarray, mesh, axis: str = "pod"):
         return jnp.sum(qs.astype(jnp.float32) * ss.reshape(
             (-1,) + (1,) * xs.ndim), axis=0)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=rep,
-                       check_vma=False)
+    fn = shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=rep)
     return fn(x)

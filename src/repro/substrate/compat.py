@@ -1,0 +1,182 @@
+"""Feature-detected mesh/sharding implementations for both JAX generations.
+
+Generation map (all resolved per call, never cached, so monkeypatching the
+jax module flips the substrate):
+
+    operation             modern (>= 0.6)                     legacy (0.4.x)
+    -------------------   ---------------------------------   ------------------------------
+    make_mesh             jax.make_mesh(axis_types=Auto...)   jax.make_mesh / Mesh(reshape)
+    mesh_context          jax.set_mesh / sharding.use_mesh    Mesh.__enter__
+    current_abstract_mesh sharding.get_abstract_mesh          pxla thread_resources physical
+    constrain             with_sharding_constraint            with_sharding_constraint
+                          (no-op when no mesh is active, both generations)
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Iterator, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec
+
+
+def jax_mesh_api() -> str:
+    """'modern' when the >=0.6 mesh-context API is present, else 'legacy'."""
+    if getattr(jax, "set_mesh", None) is not None or \
+            getattr(jax.sharding, "use_mesh", None) is not None:
+        return "modern"
+    return "legacy"
+
+
+# ------------------------------------------------------------------ make_mesh
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices: Sequence[Any] | None = None) -> Mesh:
+    """Build a Mesh of `shape` over `axes`, optionally from explicit devices.
+
+    On modern JAX the axes are marked AxisType.Auto (the compiler keeps full
+    sharding freedom, matching 0.4.x semantics).  Raises RuntimeError when
+    fewer devices exist than the shape needs.
+    """
+    shape = tuple(int(s) for s in shape)
+    axes = tuple(axes)
+    n = math.prod(shape)
+    devs = np.asarray(devices if devices is not None else jax.devices()).ravel()
+    if devs.size < n:
+        raise RuntimeError(f"need {n} devices, have {devs.size}")
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    mk = getattr(jax, "make_mesh", None)
+    if axis_type is not None and mk is not None:
+        return mk(shape, axes, devices=list(devs[:n]),
+                  axis_types=(axis_type.Auto,) * len(axes))
+    return Mesh(devs[:n].reshape(shape), axes)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# --------------------------------------------------------------- mesh context
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh) -> Iterator[Mesh]:
+    """Activate `mesh` for jit tracing / sharding constraints in this block."""
+    setter = getattr(jax, "set_mesh", None) or \
+        getattr(jax.sharding, "use_mesh", None)
+    if setter is not None:
+        with setter(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def current_abstract_mesh():
+    """The mesh active for the current trace, or None when there is none.
+
+    Modern JAX reports the abstract mesh; legacy JAX the physical mesh from
+    the thread-local resource env.  Both expose .shape / .axis_names, which
+    is all callers may rely on.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        am = getter()
+        if am is None or am.empty:
+            return None
+        return am
+    from jax.interpreters import pxla
+
+    pm = pxla.thread_resources.env.physical_mesh
+    return None if pm.empty else pm
+
+
+def current_axis_sizes() -> dict[str, int] | None:
+    """axis-name -> size of the active mesh, or None outside any mesh."""
+    am = current_abstract_mesh()
+    return None if am is None else dict(am.shape)
+
+
+# ------------------------------------------------------------- cost analysis
+def compiled_cost_analysis(compiled) -> dict:
+    """Normalize Compiled.cost_analysis() across generations.
+
+    0.4.x returns a one-element list of dicts (one per program); modern JAX
+    returns the dict directly.  Always returns a dict ({} when XLA offers no
+    analysis).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+# ----------------------------------------------------------------- shard_map
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs):
+    """shard_map across generations, replication checking off.
+
+    Modern JAX: jax.shard_map (check_vma, earlier check_rep).  Legacy:
+    jax.experimental.shard_map.shard_map (check_rep).
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+
+    import inspect
+
+    params = inspect.signature(sm).parameters
+    check_kw = "check_vma" if "check_vma" in params else "check_rep"
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{check_kw: False})
+
+
+# ----------------------------------------------------------------- constrain
+def constrain_spec(x, spec: PartitionSpec):
+    """with_sharding_constraint that no-ops when no mesh is active."""
+    if current_abstract_mesh() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def degrade_spec(shape: Sequence[int],
+                 candidates: Sequence[Sequence[str]],
+                 sizes: dict[str, int]) -> PartitionSpec:
+    """Greedy divisibility degradation: per dimension, keep the candidate
+    mesh axes (outermost first) that exist in `sizes`, are not yet used, and
+    whose cumulative product divides the dimension.  The single source of
+    this algorithm -- models.common.resolve_spec layers logical-name lookup
+    on top of it.
+    """
+    out: list[Any] = []
+    used: set[str] = set()
+    for dim, names in zip(shape, candidates):
+        keep: list[str] = []
+        shard = 1
+        for ax in names:
+            if ax is None:
+                continue
+            if ax in sizes and ax not in used and dim % (shard * sizes[ax]) == 0:
+                keep.append(ax)
+                shard *= sizes[ax]
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return PartitionSpec(*out)
+
+
+def constrain(x, *axes):
+    """Constrain `x` by mesh-axis names, degrading gracefully.
+
+    Each entry is a mesh axis name, a tuple of names, or None.  Axes absent
+    from the active mesh or not dividing the dimension are dropped; with no
+    active mesh the call is the identity.
+    """
+    sizes = current_axis_sizes()
+    if not sizes:
+        return x
+    cands = [entry if isinstance(entry, tuple) else (entry,) for entry in axes]
+    spec = degrade_spec(x.shape, cands, sizes)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -27,6 +27,7 @@ from ..configs.base import ArchConfig, ShapeCell
 from ..data.pipeline import DataConfig, SyntheticLM
 from ..models.common import init_params, param_shardings
 from ..models.model import Model, build
+from ..substrate import mesh_context
 from ..launch.steps import build_train, input_shardings, make_optimizer
 from ..sched.layer_dag import build_layer_dag
 from ..sched.straggler import StragglerMonitor
@@ -71,7 +72,7 @@ class Trainer:
     def _setup(self):
         self._warmup_steps = 1  # first step after (re)setup includes jit compile
         self.mesh = self.mesh_factory()
-        with jax.set_mesh(self.mesh):
+        with mesh_context(self.mesh):
             self.step_fn, self.opt, sh = build_train(
                 self.model, self.mesh, total_steps=self.tcfg.steps,
                 peak_lr=self.tcfg.peak_lr)
@@ -80,7 +81,7 @@ class Trainer:
                 self.model.input_specs(self.cell), self.mesh)
 
     def _fresh_state(self):
-        with jax.set_mesh(self.mesh):
+        with mesh_context(self.mesh):
             params = jax.jit(
                 self.model.init, out_shardings=self.shardings["params"]
             )(jax.random.PRNGKey(self.tcfg.seed))
@@ -118,7 +119,7 @@ class Trainer:
                     self.restarts += 1
                     raise SimulatedFailure(f"node lost at step {step}")
                 batch = self.data.sharded_batch(step - 1, self.in_sh)
-                with jax.set_mesh(self.mesh):
+                with mesh_context(self.mesh):
                     params, opt_state, m = self.step_fn(params, opt_state, batch)
                 loss = float(m["loss"])
                 dt = time.monotonic() - t0

@@ -1,0 +1,48 @@
+"""Optional-hypothesis shim: property tests auto-skip when hypothesis is
+absent instead of crashing collection of the whole suite.
+
+Usage in test modules (instead of ``from hypothesis import ...``):
+
+    from _hyp import given, settings, st
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        """Stand-in @given: marks the test skipped."""
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        """Stand-in @settings: identity decorator."""
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategies:
+        """Just enough of hypothesis.strategies for module-level decorators."""
+
+        @staticmethod
+        def integers(*_a, **_k):
+            return None
+
+        @staticmethod
+        def sampled_from(*_a, **_k):
+            return None
+
+        @staticmethod
+        def floats(*_a, **_k):
+            return None
+
+        @staticmethod
+        def booleans(*_a, **_k):
+            return None
+
+    st = _Strategies()

@@ -1,10 +1,15 @@
 import numpy as np
 import pytest
-from hypothesis import settings
 
-# keep hypothesis fast on the 1-core CI box
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:  # property tests auto-skip via tests/_hyp.py
+    settings = None
+
+if settings is not None:
+    # keep hypothesis fast on the 1-core CI box
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
 
 
 @pytest.fixture

@@ -28,8 +28,15 @@ def test_dryrun_smoke_cell(arch, cell, mesh, tmp_path):
          "--cell", cell, "--mesh", mesh, "--smoke", "--out", str(tmp_path)],
         env=env, capture_output=True, text=True, timeout=420,
     )
-    assert r.returncode == 0, r.stdout + r.stderr
-    rec = json.loads((tmp_path / f"{arch}__{cell}__{mesh}.json").read_text())
+    rec_path = tmp_path / f"{arch}__{cell}__{mesh}.json"
+    rec_err = ""
+    if rec_path.exists():
+        rec_err = json.loads(rec_path.read_text()).get("error", "")
+    assert r.returncode == 0, (
+        f"--- stdout ---\n{r.stdout}\n--- stderr ---\n{r.stderr}\n"
+        f"--- record error ---\n{rec_err}"
+    )
+    rec = json.loads(rec_path.read_text())
     assert rec["ok"], rec.get("error")
     assert rec["cost_analysis"]["flops"] > 0
     assert rec["memory_analysis"]["argument_size_in_bytes"] > 0

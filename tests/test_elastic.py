@@ -21,6 +21,7 @@ SCRIPT = textwrap.dedent("""
     from jax.sharding import Mesh
     import repro.configs as C
     from repro.configs.base import ShapeCell
+    from repro.substrate import mesh_context
     from repro.train import Trainer, TrainerConfig
 
     cell = ShapeCell("smoke", seq_len=32, global_batch=8, kind="train")
@@ -54,7 +55,7 @@ SCRIPT = textwrap.dedent("""
     import jax.numpy as jnp
     for step in range(7, 11):
         batch = t2.data.sharded_batch(step - 1, t2.in_sh)
-        with jax.set_mesh(t2.mesh):
+        with mesh_context(t2.mesh):
             params, opt, m = t2.step_fn(params, opt, batch)
         loss = float(m["loss"])
         r = ref[step]

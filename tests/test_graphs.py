@@ -1,7 +1,7 @@
 """Workload generators: structure invariants and the paper's exact counts."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.graphs import (
     epigenomics,

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels import ceft_relax, minplus, pallas_relax
 from repro.kernels.ref import ceft_relax_ref, minplus_ref

@@ -18,6 +18,7 @@ SCRIPT = textwrap.dedent("""
     from repro.models.model import build
     from repro.models import transformer
     from repro.launch.pipeline import pipeline_forward
+    from repro.substrate import mesh_context
     import dataclasses
 
     cfg = dataclasses.replace(C.get("granite-3-8b", smoke=True),
@@ -35,7 +36,7 @@ SCRIPT = textwrap.dedent("""
     mesh = Mesh(np.array(jax.devices()).reshape(4), ("pipe",))
     x = transformer.embed_tokens(params, cfg, tok)
     from repro.models.layers import rmsnorm
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         h = jax.jit(lambda blocks, x: pipeline_forward(
             cfg, blocks, x, mesh, n_micro=4))(params["blocks"], x)
     hidden_pp = rmsnorm(params["final_norm"], h, cfg.norm_eps)

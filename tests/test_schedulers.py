@@ -2,7 +2,7 @@
 the CEFT-HEFT rank variants."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core import (
     ceft,
