@@ -24,5 +24,21 @@ if [ -n "$violations" ]; then
 fi
 echo "ci: choke-point invariant holds"
 
+# Scoped sharding profiles (ISSUE 2): LOGICAL_RULES is the baseline table
+# inside models/common.py only -- every other module resolves rules through
+# the active ShardingProfile (sharding_profile context manager / explicit
+# profile= arg), so concurrent engines can't race on a global dict.
+# Validated against jax 0.4.37; the grep itself is version-independent and
+# applies to the whole supported range (0.4.x and the 0.6+ mesh API).
+echo "ci: forbidden-API grep (LOGICAL_RULES outside models/common.py)"
+violations=$(grep -rn "LOGICAL_RULES" src/ tests/ --include='*.py' \
+    | grep -v "^src/repro/models/common.py:" || true)
+if [ -n "$violations" ]; then
+    echo "ci: FAIL -- LOGICAL_RULES accessed outside src/repro/models/common.py:"
+    echo "$violations"
+    exit 1
+fi
+echo "ci: profile choke-point invariant holds"
+
 echo "ci: tier-1 tests"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q

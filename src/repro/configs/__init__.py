@@ -11,7 +11,7 @@ from . import (
     qwen2_vl_72b,
     whisper_tiny,
 )
-from .base import ArchConfig, SHAPES, ShapeCell, cells_for
+from .base import ArchConfig, SHAPES, ShapeCell, cells_for, smoke_cell
 
 _MODULES = {
     "jamba-v0.1-52b": jamba_v0_1_52b,
@@ -34,4 +34,5 @@ def get(name: str, smoke: bool = False) -> ArchConfig:
     return mod.SMOKE if smoke else mod.CONFIG
 
 
-__all__ = ["ARCHS", "ArchConfig", "SHAPES", "ShapeCell", "cells_for", "get"]
+__all__ = ["ARCHS", "ArchConfig", "SHAPES", "ShapeCell", "cells_for", "get",
+           "smoke_cell"]

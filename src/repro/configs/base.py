@@ -155,3 +155,19 @@ def cells_for(cfg: ArchConfig) -> list[str]:
     if cfg.supports_long:
         out.append("long_500k")
     return out
+
+
+# smoke (seq_len, global_batch) per cell: shrunk to CPU scale but keeping the
+# cell's character (shared by the dry-run and roofline --smoke paths)
+_SMOKE_SCALE: dict[str, tuple[int, int]] = {
+    "train_4k": (64, 8),
+    "prefill_32k": (128, 4),
+    "decode_32k": (128, 8),
+    "long_500k": (512, 2),
+}
+
+
+def smoke_cell(cell_name: str) -> ShapeCell:
+    """The named cell shrunk to smoke scale (fake-fleet / CPU testing)."""
+    seq, batch = _SMOKE_SCALE[cell_name]
+    return dataclasses.replace(SHAPES[cell_name], seq_len=seq, global_batch=batch)

@@ -17,7 +17,6 @@ record memory/cost/collective analysis for §Dry-run and §Roofline.
   python -m repro.launch.dryrun --all --out experiments/dryrun      # driver
 """
 import argparse
-import dataclasses
 import json
 import subprocess
 import sys
@@ -30,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import configs as C
-from ..models.common import tree_map_pspec, resolve_spec
+from ..models.common import resolve_spec, sharding_profile, tree_map_pspec
 from ..models.model import build
 from ..substrate import (
     compiled_cost_analysis,
@@ -87,12 +86,16 @@ def analytic_bytes_per_device(spec_tree, mesh, dtype_override=None) -> int:
 
 
 def run_cell(arch: str, cell_name: str, mesh_kind: str, smoke: bool, out_dir: Path, profile: str = 'baseline'):
+    # scoped for the whole lower+compile: the profile travels with this cell,
+    # not with process-global state (concurrent cells stay independent)
+    with sharding_profile(profile):
+        return _run_cell(arch, cell_name, mesh_kind, smoke, out_dir, profile)
+
+
+def _run_cell(arch: str, cell_name: str, mesh_kind: str, smoke: bool, out_dir: Path, profile: str):
     cfg = C.get(arch, smoke=smoke)
-    cell = C.SHAPES[cell_name]
-    if smoke:  # shrink the cells to smoke scale but keep their character
-        scale = {"train_4k": (64, 8), "prefill_32k": (128, 4),
-                 "decode_32k": (128, 8), "long_500k": (512, 2)}[cell_name]
-        cell = dataclasses.replace(cell, seq_len=scale[0], global_batch=scale[1])
+    # smoke: shrink the cells to smoke scale but keep their character
+    cell = C.smoke_cell(cell_name) if smoke else C.SHAPES[cell_name]
     mesh = make_mesh(mesh_kind, smoke)
     model = build(cfg)
     rec = {
@@ -239,8 +242,6 @@ def main():
                     choices=["baseline", "opt1", "serve", "moe_ep"])
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
-    from ..models.common import set_sharding_profile
-    set_sharding_profile(args.profile)
     if args.all:
         sys.exit(driver(args))
     assert args.arch and args.cell and args.mesh in ("single", "multi", "moe")

@@ -54,7 +54,16 @@ from ..models.layers import (
 )
 from ..models.moe import moe, moe_specs
 from ..models.ssm import ssd_decode, ssd_prefill, ssm_specs
-from ..models.common import PSpec, abstract_params, param_shardings, resolve_spec
+from ..models.common import (
+    PSpec,
+    ShardingProfile,
+    abstract_params,
+    active_profile,
+    param_shardings,
+    resolve_profile,
+    resolve_spec,
+    sharding_profile,
+)
 from ..substrate import compiled_cost_analysis, mesh_context
 from .hlo_stats import collective_stats
 from .mesh import mesh_axis_sizes
@@ -383,7 +392,17 @@ def build_probes(cfg: ArchConfig, cell: ShapeCell, mesh) -> list[Probe]:
     return probes
 
 
-def analyze_cell(cfg: ArchConfig, cell: ShapeCell, mesh) -> dict:
+def analyze_cell(cfg: ArchConfig, cell: ShapeCell, mesh,
+                 profile: str | ShardingProfile | None = None) -> dict:
+    # all probe construction + lowering happens under one scoped profile, so
+    # concurrent analyses with different profiles cannot race
+    prof = resolve_profile(profile) if profile is not None else active_profile()
+    with sharding_profile(prof):
+        return _analyze_cell(cfg, cell, mesh, prof)
+
+
+def _analyze_cell(cfg: ArchConfig, cell: ShapeCell, mesh,
+                  prof: ShardingProfile) -> dict:
     chips = int(mesh.devices.size)
     comps = {}
     totals = {"flops": 0.0, "bytes": 0.0, "bytes_hlo": 0.0, "coll": 0.0}
@@ -412,6 +431,7 @@ def analyze_cell(cfg: ArchConfig, cell: ShapeCell, mesh) -> dict:
     bound = max(terms.values())
     return {
         "arch": cfg.name, "cell": cell.name, "chips": chips,
+        "profile": prof.name,
         "mesh_shape": dict(mesh_axis_sizes(mesh)),
         "terms": terms, "terms_upper": terms_upper, "dominant": dominant,
         "step_time_lower_bound_s": bound,
@@ -433,23 +453,22 @@ def main():
     ap.add_argument("--cell", choices=list(C.SHAPES))
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "moe"])
-    ap.add_argument("--smoke", action="store_true", help="small fake fleet")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fake fleet, smoke configs + shrunk cells")
     ap.add_argument("--profile", default="baseline",
                     choices=["baseline", "opt1", "serve", "moe_ep"])
     ap.add_argument("--out", default="experiments/roofline")
     args = ap.parse_args()
-    from ..models.common import set_sharding_profile
-    set_sharding_profile(args.profile)
     mesh = make_mesh(args.mesh, smoke=args.smoke)
     out = Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     cells = ([(args.arch, args.cell)] if not args.all else
              [(a, c) for a in C.ARCHS for c in C.cells_for(C.get(a))])
     for arch, cell_name in cells:
-        cfg = C.get(arch)
-        cell = C.SHAPES[cell_name]
+        cfg = C.get(arch, smoke=args.smoke)
+        cell = C.smoke_cell(cell_name) if args.smoke else C.SHAPES[cell_name]
         try:
-            rec = analyze_cell(cfg, cell, mesh)
+            rec = analyze_cell(cfg, cell, mesh, profile=args.profile)
         except Exception as e:  # pragma: no cover
             import traceback
             rec = {"arch": arch, "cell": cell_name, "error": traceback.format_exc(limit=15)}

@@ -17,10 +17,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--profile", default="serve",
+                    choices=["baseline", "opt1", "serve", "moe_ep"],
+                    help="sharding profile, scoped to this engine")
     args = ap.parse_args()
 
     cfg = C.get(args.arch, smoke=True)
-    eng = Engine(cfg)
+    eng = Engine(cfg, profile=args.profile)
     rng = np.random.default_rng(0)
     prompts = rng.integers(2, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
     out = eng.generate(prompts, ServeConfig(max_new_tokens=args.max_new))

@@ -22,12 +22,16 @@ def main():
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--resume", action="store_true",
                     help="restore the newest valid checkpoint before training")
+    ap.add_argument("--profile", default="opt1",
+                    choices=["baseline", "opt1", "serve", "moe_ep"],
+                    help="sharding profile, scoped to this trainer")
     args = ap.parse_args()
 
     cfg = C.get(args.arch, smoke=args.smoke)
     cell = ShapeCell("cli", seq_len=args.seq, global_batch=args.batch, kind="train")
     tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
-                         ckpt_dir=args.ckpt_dir, log_every=max(1, args.steps // 20))
+                         ckpt_dir=args.ckpt_dir, log_every=max(1, args.steps // 20),
+                         profile=args.profile)
     tr = Trainer(cfg, cell, tcfg, make_test_mesh)
     for m in tr.run():
         print(m, flush=True)

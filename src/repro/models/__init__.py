@@ -1,15 +1,21 @@
 """repro.models — pure-JAX model substrate for the assigned architectures."""
 from .common import (
     PSpec,
+    ShardingProfile,
     abstract_params,
+    active_profile,
     constrain,
     init_params,
     param_shardings,
+    resolve_profile,
     resolve_spec,
+    set_sharding_profile,
+    sharding_profile,
 )
 from .model import Model, build
 
 __all__ = [
-    "Model", "PSpec", "abstract_params", "build", "constrain",
-    "init_params", "param_shardings", "resolve_spec",
+    "Model", "PSpec", "ShardingProfile", "abstract_params", "active_profile",
+    "build", "constrain", "init_params", "param_shardings", "resolve_profile",
+    "resolve_spec", "set_sharding_profile", "sharding_profile",
 ]

@@ -13,9 +13,13 @@ heads shard -- one rules table serves all ten architectures.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import dataclasses
 import math
-from typing import Any, Callable
+import warnings
+from types import MappingProxyType
+from typing import Any, Callable, Iterator, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +28,10 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from ..substrate import constrain_spec, current_axis_sizes, degrade_spec
 
-# logical axis name -> preferred mesh axes (applied greedily, outermost first)
+# logical axis name -> preferred mesh axes (applied greedily, outermost first).
+# This is the *baseline* table; profile overlays never mutate it.  No module
+# outside models/common.py may read or write this dict (scripts/ci.sh greps) --
+# consumers go through the active ShardingProfile instead.
 LOGICAL_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
     "seq": ("model",),        # sequence-parallel residual stream (train/prefill)
@@ -88,16 +95,100 @@ PROFILES: dict[str, dict[str, tuple[str, ...]]] = {
         "ssm_inner": ("model", "data"),
     },
 }
-_DEFAULT_RULES = dict(LOGICAL_RULES)
+@dataclasses.dataclass(frozen=True)
+class ShardingProfile:
+    """An immutable, fully-resolved logical->mesh rules table.
+
+    The paper's point in miniature: a partial schedule (here, a sharding
+    layout) is only meaningful together with the mapping that produced it.
+    A profile therefore carries the *complete* table (baseline rules with the
+    named overlay applied), never a diff against mutable module state, so two
+    profiles can be active in the same process without racing.
+    """
+    name: str
+    rules: Mapping[str, tuple[str, ...]]
+
+    def rule(self, logical: str) -> tuple[str, ...]:
+        return self.rules.get(logical, ())
+
+
+def _build_profile(name: str) -> ShardingProfile:
+    if name not in PROFILES:
+        raise KeyError(
+            f"unknown sharding profile {name!r}; known: {sorted(PROFILES)}")
+    return ShardingProfile(name, MappingProxyType({**LOGICAL_RULES,
+                                                   **PROFILES[name]}))
+
+
+_PROFILE_CACHE: dict[str, ShardingProfile] = {}
+
+
+def resolve_profile(profile: str | ShardingProfile) -> ShardingProfile:
+    """Name or profile -> ShardingProfile.  Raises KeyError on an unknown
+    name *before* any state changes, so a failed lookup never corrupts the
+    active profile (the latent bug in the old global-mutation path)."""
+    if isinstance(profile, ShardingProfile):
+        return profile
+    if profile not in _PROFILE_CACHE:
+        _PROFILE_CACHE[profile] = _build_profile(profile)
+    return _PROFILE_CACHE[profile]
+
+
+# contextvars give per-thread AND per-async-task scoping: each thread (and
+# each asyncio task) sees only the profiles entered on its own stack.
+_ACTIVE_PROFILE: contextvars.ContextVar[ShardingProfile | None] = \
+    contextvars.ContextVar("repro_sharding_profile", default=None)
+# process-wide fallback for the deprecated set_sharding_profile() shim;
+# scoped sharding_profile(...) blocks always take precedence
+_PROCESS_DEFAULT_PROFILE: ShardingProfile | None = None
+
+
+def active_profile() -> ShardingProfile:
+    """The profile rule lookups use when none is passed explicitly:
+    innermost ``sharding_profile`` block on this thread/task, else the
+    process default set by the deprecated shim, else baseline."""
+    prof = _ACTIVE_PROFILE.get()
+    if prof is not None:
+        return prof
+    if _PROCESS_DEFAULT_PROFILE is not None:
+        return _PROCESS_DEFAULT_PROFILE
+    return resolve_profile("baseline")
+
+
+@contextlib.contextmanager
+def sharding_profile(profile: str | ShardingProfile) -> Iterator[ShardingProfile]:
+    """Scoped profile selection::
+
+        with sharding_profile("serve") as prof:
+            shardings = param_shardings(specs, mesh)
+
+    Nesting replaces (does not merge): the innermost profile's full table
+    wins, and exiting restores the enclosing profile -- guaranteed by
+    try/finally even when the body raises.  Thread- and async-safe.
+    """
+    prof = resolve_profile(profile)  # validate before touching any state
+    token = _ACTIVE_PROFILE.set(prof)
+    try:
+        yield prof
+    finally:
+        _ACTIVE_PROFILE.reset(token)
 
 
 def set_sharding_profile(name: str) -> None:
-    """Switch the logical->mesh rules table (mutates module state; the
-    launcher selects 'serve' for prefill/decode cells, 'opt1' for training
-    after the §Perf iteration validated it)."""
-    LOGICAL_RULES.clear()
-    LOGICAL_RULES.update(_DEFAULT_RULES)
-    LOGICAL_RULES.update(PROFILES[name])
+    """DEPRECATED shim: sets the process-wide *default* profile.
+
+    Use ``sharding_profile(name)`` instead -- the scoped form composes under
+    concurrency; this one is a process-global and any active scoped profile
+    overrides it.  Inherits the restoration guarantee of the scoped path: an
+    unknown name raises before the default changes, and no shared table is
+    ever mutated, so there is no corrupt intermediate state to restore."""
+    warnings.warn(
+        "set_sharding_profile() is deprecated; use the scoped "
+        "`with sharding_profile(name):` context manager",
+        DeprecationWarning, stacklevel=2)
+    prof = resolve_profile(name)
+    global _PROCESS_DEFAULT_PROFILE
+    _PROCESS_DEFAULT_PROFILE = prof
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,35 +261,50 @@ def abstract_params(spec_tree, param_dtype=jnp.float32):
 
 
 # ----------------------------------------------------------------- shardings
-def resolve_spec(shape: tuple[int, ...], logical: tuple[str, ...], mesh_shape: dict[str, int]) -> PartitionSpec:
-    """Logical axes -> PartitionSpec with divisibility degradation."""
-    cands = [LOGICAL_RULES.get(lname, ()) for lname in logical]
+def resolve_spec(shape: tuple[int, ...], logical: tuple[str, ...],
+                 mesh_shape: dict[str, int],
+                 profile: str | ShardingProfile | None = None) -> PartitionSpec:
+    """Logical axes -> PartitionSpec with divisibility degradation.
+
+    Rules come from ``profile`` when given, else from the active scoped
+    profile (``sharding_profile``), else the process default."""
+    prof = resolve_profile(profile) if profile is not None else active_profile()
+    cands = [prof.rule(lname) for lname in logical]
     return degrade_spec(shape, cands, mesh_shape)
 
 
-def param_shardings(spec_tree, mesh: jax.sharding.Mesh):
+def param_shardings(spec_tree, mesh: jax.sharding.Mesh,
+                    profile: str | ShardingProfile | None = None):
     ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    prof = resolve_profile(profile) if profile is not None else active_profile()
     return tree_map_pspec(
-        lambda _, p: NamedSharding(mesh, resolve_spec(p.shape, p.logical, ms)),
+        lambda _, p: NamedSharding(
+            mesh, resolve_spec(p.shape, p.logical, ms, profile=prof)),
         spec_tree,
     )
 
 
-def logical_pspecs(spec_tree, mesh_shape: dict[str, int]):
+def logical_pspecs(spec_tree, mesh_shape: dict[str, int],
+                   profile: str | ShardingProfile | None = None):
+    prof = resolve_profile(profile) if profile is not None else active_profile()
     return tree_map_pspec(
-        lambda _, p: resolve_spec(p.shape, p.logical, mesh_shape), spec_tree
+        lambda _, p: resolve_spec(p.shape, p.logical, mesh_shape, profile=prof),
+        spec_tree,
     )
 
 
-def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+def constrain(x: jax.Array, *logical: str | None,
+              profile: str | ShardingProfile | None = None) -> jax.Array:
     """Sharding constraint by logical axis names, no-op outside a mesh context.
 
     Activations use this (params are sharded via in_shardings).  Degradation:
     an axis that does not divide is dropped, so every architecture compiles on
-    every mesh.
+    every mesh.  The profile is read at trace time, so the jit wrapper must be
+    entered under the same profile every call (Engine/Trainer pin theirs).
     """
     ms = current_axis_sizes()
     if not ms:
         return x
-    spec = resolve_spec(x.shape, tuple(l or "none" for l in logical), ms)
+    spec = resolve_spec(x.shape, tuple(l or "none" for l in logical), ms,
+                        profile=profile)
     return constrain_spec(x, spec)

@@ -10,7 +10,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..models.common import init_params
+from ..models.common import (
+    ShardingProfile,
+    active_profile,
+    init_params,
+    resolve_profile,
+    sharding_profile,
+)
 from ..models.model import Model, build
 
 
@@ -21,11 +27,19 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, cfg: ArchConfig, params=None, seed: int = 0):
+    def __init__(self, cfg: ArchConfig, params=None, seed: int = 0,
+                 profile: str | ShardingProfile | None = None):
         self.cfg = cfg
+        # Pin the sharding profile at construction (default: whatever is
+        # active right now).  Every trace -- init here, prefill/decode in
+        # generate() -- re-enters it, so two engines with different profiles
+        # in one process each resolve their own rules, never each other's.
+        self.profile = (resolve_profile(profile) if profile is not None
+                        else active_profile())
         self.model = build(cfg)
-        self.params = params if params is not None else self.model.init(
-            jax.random.PRNGKey(seed))
+        with sharding_profile(self.profile):
+            self.params = params if params is not None else self.model.init(
+                jax.random.PRNGKey(seed))
         self._decode = jax.jit(self.model.decode)
         self._prefill = jax.jit(self.model.prefill)
 
@@ -58,6 +72,10 @@ class Engine:
     # --------------------------------------------------------------- generate
     def generate(self, prompts: np.ndarray, scfg: ServeConfig | None = None):
         """prompts: (B, P) int32.  Returns (B, P+new) tokens (greedy)."""
+        with sharding_profile(self.profile):
+            return self._generate(prompts, scfg)
+
+    def _generate(self, prompts: np.ndarray, scfg: ServeConfig | None = None):
         scfg = scfg or ServeConfig()
         cfg = self.cfg
         B, P = prompts.shape

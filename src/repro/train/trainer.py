@@ -25,7 +25,12 @@ import numpy as np
 from .. import checkpoint as ckpt_lib
 from ..configs.base import ArchConfig, ShapeCell
 from ..data.pipeline import DataConfig, SyntheticLM
-from ..models.common import init_params, param_shardings
+from ..models.common import (
+    init_params,
+    param_shardings,
+    resolve_profile,
+    sharding_profile,
+)
 from ..models.model import Model, build
 from ..substrate import mesh_context
 from ..launch.steps import build_train, input_shardings, make_optimizer
@@ -45,6 +50,7 @@ class TrainerConfig:
     straggler_sim: dict | None = None       # {step: (class, slowdown)} simulation
     log_every: int = 10
     peak_lr: float = 5e-3                   # smoke-scale default
+    profile: str = "baseline"               # sharding profile, scoped per-trainer
 
 
 class SimulatedFailure(RuntimeError):
@@ -57,6 +63,9 @@ class Trainer:
         self.cfg = cfg
         self.cell = cell
         self.tcfg = tcfg
+        # pinned once; every trace/execution below re-enters it, so a trainer
+        # and a serve engine (or two trainers) never race on profile state
+        self.profile = resolve_profile(tcfg.profile)
         self.mesh_factory = mesh_factory
         self.model = build(cfg)
         self.data = SyntheticLM(DataConfig(cfg.vocab, cell.seq_len,
@@ -72,7 +81,7 @@ class Trainer:
     def _setup(self):
         self._warmup_steps = 1  # first step after (re)setup includes jit compile
         self.mesh = self.mesh_factory()
-        with mesh_context(self.mesh):
+        with sharding_profile(self.profile), mesh_context(self.mesh):
             self.step_fn, self.opt, sh = build_train(
                 self.model, self.mesh, total_steps=self.tcfg.steps,
                 peak_lr=self.tcfg.peak_lr)
@@ -81,7 +90,7 @@ class Trainer:
                 self.model.input_specs(self.cell), self.mesh)
 
     def _fresh_state(self):
-        with mesh_context(self.mesh):
+        with sharding_profile(self.profile), mesh_context(self.mesh):
             params = jax.jit(
                 self.model.init, out_shardings=self.shardings["params"]
             )(jax.random.PRNGKey(self.tcfg.seed))
@@ -119,7 +128,7 @@ class Trainer:
                     self.restarts += 1
                     raise SimulatedFailure(f"node lost at step {step}")
                 batch = self.data.sharded_batch(step - 1, self.in_sh)
-                with mesh_context(self.mesh):
+                with sharding_profile(self.profile), mesh_context(self.mesh):
                     params, opt_state, m = self.step_fn(params, opt_state, batch)
                 loss = float(m["loss"])
                 dt = time.monotonic() - t0

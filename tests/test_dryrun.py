@@ -41,3 +41,30 @@ def test_dryrun_smoke_cell(arch, cell, mesh, tmp_path):
     assert rec["cost_analysis"]["flops"] > 0
     assert rec["memory_analysis"]["argument_size_in_bytes"] > 0
     assert "collective_bytes" in rec["collectives"]
+
+
+@pytest.mark.parametrize("profile,tag", [("baseline", ""), ("serve", "__serve")])
+def test_roofline_analyze_cell_end_to_end(profile, tag, tmp_path):
+    """ROADMAP smoke: run analyze_cell via repro.launch.roofline on a fake
+    fleet (subprocess so the forced device count applies), not just its
+    components."""
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.roofline", "--arch",
+         "granite-3-8b", "--cell", "train_4k", "--mesh", "single", "--smoke",
+         "--profile", profile, "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=420,
+    )
+    assert r.returncode == 0, f"--- stdout ---\n{r.stdout}\n--- stderr ---\n{r.stderr}"
+    rec = json.loads(
+        (tmp_path / f"granite-3-8b__train_4k__single{tag}.json").read_text())
+    assert "error" not in rec, rec.get("error")
+    assert rec["profile"] == profile
+    assert rec["chips"] == 8
+    for term in ("compute_s", "memory_s", "collective_s"):
+        assert rec["terms"][term] >= 0
+    assert rec["terms"]["compute_s"] > 0
+    assert rec["components"], "no probes compiled"
+    assert all(c["flops"] >= 0 for c in rec["components"].values())

@@ -7,9 +7,9 @@ import repro.configs as C
 from repro.configs.base import SHAPES, cells_for
 from repro.launch.hlo_stats import collective_stats, _shape_bytes
 from repro.models.common import (
-    LOGICAL_RULES,
+    active_profile,
     resolve_spec,
-    set_sharding_profile,
+    sharding_profile,
 )
 from repro.models.model import build
 
@@ -65,12 +65,23 @@ def test_resolve_spec_degradation():
 
 
 def test_profile_switching_roundtrip():
-    set_sharding_profile("serve")
-    assert LOGICAL_RULES["batch"] == ()
-    assert LOGICAL_RULES["qkv"] == ("model", "data")
-    set_sharding_profile("baseline")
-    assert LOGICAL_RULES["batch"] == ("pod", "data")
-    assert LOGICAL_RULES["qkv"] == ("model",)
+    with sharding_profile("serve") as prof:
+        assert prof.rule("batch") == ()
+        assert prof.rule("qkv") == ("model", "data")
+        assert active_profile() is prof
+    # exiting the block restores baseline resolution
+    base = active_profile()
+    assert base.rule("batch") == ("pod", "data")
+    assert base.rule("qkv") == ("model",)
+
+
+def test_resolve_spec_takes_explicit_profile():
+    ms = {"data": 16, "model": 16}
+    s_base = resolve_spec((256, 4096), ("batch", "qkv"), ms, profile="baseline")
+    s_serve = resolve_spec((256, 4096), ("batch", "qkv"), ms, profile="serve")
+    assert s_base[0] is not None      # batch shards under baseline
+    assert s_serve[0] is None         # serve replicates decode activations
+    assert s_serve[1] == ("model", "data")
 
 
 @pytest.mark.parametrize("arch", C.ARCHS)

@@ -1,0 +1,150 @@
+"""Scoped sharding profiles: restoration guarantees, nesting, the deprecated
+shim, and the concurrency regression the old global rules-table design failed
+(two engines with different profiles racing on one process-wide dict)."""
+import threading
+
+import pytest
+
+import repro.configs as C
+from repro.models.common import (
+    PROFILES,
+    ShardingProfile,
+    active_profile,
+    logical_pspecs,
+    resolve_profile,
+    resolve_spec,
+    set_sharding_profile,
+    sharding_profile,
+)
+from repro.serve import Engine
+
+MS = {"data": 16, "model": 16}
+
+
+def test_profiles_are_immutable():
+    prof = resolve_profile("serve")
+    assert isinstance(prof, ShardingProfile)
+    with pytest.raises(TypeError):
+        prof.rules["batch"] = ("data",)
+
+
+def test_context_manager_restores_on_error():
+    before = active_profile()
+    with pytest.raises(RuntimeError, match="boom"):
+        with sharding_profile("serve"):
+            assert active_profile().name == "serve"
+            raise RuntimeError("boom")
+    assert active_profile() is before
+
+
+def test_unknown_profile_raises_without_state_change():
+    before = active_profile()
+    with pytest.raises(KeyError, match="unknown sharding profile"):
+        with sharding_profile("no-such-profile"):
+            pass  # pragma: no cover
+    assert active_profile() is before
+
+
+def test_nesting_inner_replaces_then_restores_outer():
+    with sharding_profile("serve"):
+        assert active_profile().rule("batch") == ()
+        with sharding_profile("moe_ep"):
+            # full replacement, not a merge: moe_ep has no batch override,
+            # so batch falls back to the baseline rule, not serve's
+            assert active_profile().rule("batch") == ("pod", "data")
+            assert active_profile().rule("experts") == ("expert",)
+        assert active_profile().rule("batch") == ()
+        assert active_profile().rule("experts") == ("model",)
+
+
+def test_shim_warns_and_is_overridden_by_scoped(monkeypatch):
+    import repro.models.common as mc
+    monkeypatch.setattr(mc, "_PROCESS_DEFAULT_PROFILE", None)
+    with pytest.warns(DeprecationWarning):
+        set_sharding_profile("serve")
+    assert active_profile().name == "serve"
+    with sharding_profile("opt1"):
+        assert active_profile().name == "opt1"
+    assert active_profile().name == "serve"
+    # unknown name raises and leaves the default untouched
+    with pytest.raises(KeyError):
+        with pytest.warns(DeprecationWarning):
+            set_sharding_profile("bogus")
+    assert active_profile().name == "serve"
+
+
+def test_threads_resolve_their_own_profiles():
+    """Two threads hold different profiles *simultaneously*; each must see
+    its own rules for the whole overlap (fails on the global-dict design)."""
+    barrier = threading.Barrier(2, timeout=30)
+    errors: list[str] = []
+
+    def worker(name: str, expect_batch, expect_qkv):
+        try:
+            with sharding_profile(name):
+                barrier.wait()  # both threads now inside their profile
+                for _ in range(200):
+                    prof = active_profile()
+                    if prof.name != name:
+                        errors.append(f"{name}: saw {prof.name}")
+                        return
+                    if prof.rule("batch") != expect_batch or \
+                            prof.rule("qkv") != expect_qkv:
+                        errors.append(f"{name}: wrong rules {prof.rules}")
+                        return
+                barrier.wait()  # hold the overlap until both finish reading
+        except Exception as e:  # pragma: no cover
+            errors.append(f"{name}: {e!r}")
+
+    t1 = threading.Thread(target=worker,
+                          args=("serve", (), ("model", "data")))
+    t2 = threading.Thread(target=worker,
+                          args=("moe_ep", ("pod", "data"), ("expert", "tp")))
+    t1.start(); t2.start(); t1.join(30); t2.join(30)
+    assert not errors, errors
+
+
+def test_concurrent_engines_match_isolated_shardings():
+    """Acceptance: two engines constructed under different active profiles in
+    two threads resolve the same param pspecs as each profile selected
+    alone."""
+    cfg = C.get("granite-3-8b", smoke=True)
+
+    def alone(profile):
+        eng = Engine(cfg, profile=profile)
+        return logical_pspecs(eng.model.specs(), MS, profile=eng.profile)
+
+    expected = {p: alone(p) for p in ("serve", "baseline")}
+
+    barrier = threading.Barrier(2, timeout=60)
+    results: dict[str, object] = {}
+    errors: list[str] = []
+
+    def build(profile):
+        try:
+            with sharding_profile(profile):
+                barrier.wait()
+                eng = Engine(cfg)  # inherits this thread's active profile
+                assert eng.profile.name == profile
+                results[profile] = logical_pspecs(eng.model.specs(), MS)
+        except Exception as e:  # pragma: no cover
+            errors.append(f"{profile}: {e!r}")
+
+    threads = [threading.Thread(target=build, args=(p,))
+               for p in ("serve", "baseline")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120)
+    assert not errors, errors
+    assert results["serve"] == expected["serve"]
+    assert results["baseline"] == expected["baseline"]
+    # the two layouts genuinely differ (the race would have collapsed them)
+    assert results["serve"] != results["baseline"]
+
+
+def test_every_declared_profile_resolves():
+    for name in PROFILES:
+        prof = resolve_profile(name)
+        spec = resolve_spec((256, 4096), ("batch", "ffn"), MS, profile=prof)
+        assert len(spec) == 2
