@@ -1,11 +1,17 @@
 """CEFT scheduler throughput (paper §5 complexity + our §Perf hillclimb).
 
-Three implementations of the same algorithm:
+Four implementations of the same algorithm:
   reference : Algorithm 1 verbatim (4 nested Python loops)  -- paper-faithful
   vectorized: per-task dense (parents x P x P) contraction   -- numpy
-  jax       : level-batched lax.scan sweep (jit, the TPU formulation)
+  jax_padded: level-batched lax.scan over dense padded tables (O(levels·W·D·P²))
+  jax_csr   : edge-centric CSR segment sweep (O(e·P²), bucketed jit shapes)
 plus the batched-machines form (vmap over 8 machines -- the online
 re-planning shape from repro.sched.straggler).
+
+The irregular rows (star fan-in, heavy-tail in-degree, realworld GE/EW) are
+where the dense padding degrades worst; every jax_csr row is checked for
+bit-identical values/paths against jax_padded and for matching cpl/path
+against the float64 numpy implementation before its timing is reported.
 
 Empirical complexity fit: times regressed against P^2 * e (the paper's
 O(P^2 e) claim).
@@ -17,68 +23,145 @@ import time
 import numpy as np
 
 from repro.core import ceft, ceft_reference
-from repro.core.ceft_jax import _sweep, ceft_jax, ceft_jax_batch, device_inputs
-from repro.graphs import rgg
+from repro.core.ceft_jax import (
+    _sweep,
+    ceft_jax_batch,
+    ceft_jax_csr,
+    csr_device_inputs,
+    csr_sweep,
+    device_inputs,
+)
+from repro.graphs import (
+    epigenomics,
+    heavy_tail_fan_in,
+    interval_workload,
+    rgg,
+    star_fan_in,
+)
 
 from .common import CSV, scale, timed
 
+HEADER = ["bench", "graph", "n_tasks", "P", "edges", "impl", "ms_per_graph",
+          "graphs_per_s", "speedup_vs_reference", "speedup_vs_padded"]
 
-def run(seed: int = 5):
-    csv = CSV(["bench", "n_tasks", "P", "edges", "impl", "ms_per_graph",
-               "graphs_per_s", "speedup_vs_reference"])
+
+def _steady(fn, reps: int) -> float:
+    out = fn()  # compile
+    out[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    out[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def _row(csv, json_rows, bench, graph, n, P, e, impl, t, t_ref, t_pad):
+    sp_ref = t_ref / t if t == t and t_ref == t_ref else float("nan")
+    sp_pad = t_pad / t if t == t and t_pad == t_pad else float("nan")
+    csv.row(bench, graph, n, P, e, impl, f"{t * 1e3:.3f}",
+            f"{1.0 / t:.1f}" if t == t else "nan",
+            f"{sp_ref:.1f}" if sp_ref == sp_ref else "nan",
+            f"{sp_pad:.1f}" if sp_pad == sp_pad else "nan")
+    if json_rows is not None and t == t:  # NaN timings (skipped impls) stay CSV-only
+        json_rows.append({
+            "bench": bench, "graph": graph, "impl": impl, "n": int(n),
+            "P": int(P), "e": int(e), "ms": float(t * 1e3),
+            "speedup": None if sp_ref != sp_ref else float(sp_ref),
+            "speedup_vs_padded": None if sp_pad != sp_pad else float(sp_pad),
+        })
+
+
+def _battery(csv, json_rows, bench, graph, g, comp, m, *, ref_limit=1024,
+             check_csr=True):
+    """Time all four implementations on one workload; returns (e, t_vec)."""
+    n, P = comp.shape
+    e = g.n_edges
+    res_vec, t_vec = timed(lambda: ceft(g, comp, m), reps=2)
+    if n <= ref_limit:  # the reference is O(minutes) beyond this
+        _, t_ref = timed(lambda: ceft_reference(g, comp, m), reps=1)
+    else:
+        t_ref = float("nan")
+
+    # padded dense sweep: separate compile from steady-state
+    tables, comp_pad, L, bw = device_inputs(g, comp, m)
+    t_pad = _steady(lambda: _sweep(tables, comp_pad, L, bw), reps=5)
+
+    # CSR segment sweep, same protocol (preprocessing excluded for both)
+    inputs = csr_device_inputs(g, comp, m)
+    t_csr = _steady(lambda: csr_sweep(g, comp, inputs), reps=5)
+
+    if check_csr:
+        pad_out = _sweep(tables, comp_pad, L, bw)
+        csr_out = csr_sweep(g, comp, inputs)
+        for a, b, name in zip(pad_out, csr_out, ["ceft", "ptask", "pproc"]):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                raise AssertionError(f"csr/padded {name} mismatch on {graph}")
+        res_csr = ceft_jax_csr(g, comp, m)
+        if not np.isclose(res_csr.cpl, res_vec.cpl, rtol=2e-5):
+            raise AssertionError(f"csr cpl mismatch on {graph}")
+        if res_csr.path != res_vec.path:
+            raise AssertionError(f"csr path mismatch on {graph}")
+
+    for impl, t in [("reference", t_ref), ("vectorized", t_vec),
+                    ("jax_padded", t_pad), ("jax_csr", t_csr)]:
+        _row(csv, json_rows, bench, graph, n, P, e, impl, t, t_ref, t_pad)
+    return e, t_vec
+
+
+def run(seed: int = 5, json_rows: list | None = None):
+    csv = CSV(HEADER)
     rng = np.random.default_rng(seed)
+    s = scale()
+
+    def sz(n, lo=64):
+        return n if s >= 1.0 else max(lo, int(n * s))
+
+    # ---- regular level-structured RGGs (the paper's §7.1 shape)
     sizes = [(256, 4), (256, 16), (1024, 16), (1024, 64), (4096, 16)]
-    if scale() >= 1.0:
+    if s < 1.0:
+        sizes = [(sz(256), 4), (sz(256), 16), (sz(1024), 16)]
+        sizes = list(dict.fromkeys(sizes))  # shrinking can collapse entries
+    elif s >= 1.0:
         sizes.append((16384, 64))  # the paper's largest graphs
     fits = []
-    for n, P in sizes:
+    for idx, (n, P) in enumerate(sizes):
         wl = rgg("high", n, P, rng, o=4, alpha=0.75, beta=50)
         g, comp, m = wl.graph, wl.comp, wl.machine
-        e = g.n_edges
-
-        if n <= 1024:  # the reference is O(minutes) beyond this
-            _, t_ref = timed(lambda: ceft_reference(g, comp, m), reps=1)
-        else:
-            t_ref = float("nan")
-        _, t_vec = timed(lambda: ceft(g, comp, m), reps=2)
-
-        # jax: separate compile from steady-state
-        tables, comp_pad, L, bw = device_inputs(g, comp, m)
-        out = _sweep(tables, comp_pad, L, bw)  # compile
-        out[0].block_until_ready()
-        t0 = time.perf_counter()
-        reps = 5
-        for _ in range(reps):
-            out = _sweep(tables, comp_pad, L, bw)
-        out[0].block_until_ready()
-        t_jax = (time.perf_counter() - t0) / reps
-
-        # batched machines (vmap) -- 8 re-planning scenarios at once
-        B = 8
-        comps = np.repeat(comp[None], B, 0)
-        Ls = np.repeat(np.asarray(m.L, np.float32)[None], B, 0)
-        bws = np.repeat(np.asarray(m.bw, np.float32)[None], B, 0)
-        outb = ceft_jax_batch(g, comps, Ls, bws)  # compile
-        outb[0].block_until_ready()
-        t0 = time.perf_counter()
-        for _ in range(3):
-            outb = ceft_jax_batch(g, comps, Ls, bws)
-        outb[0].block_until_ready()
-        t_batch = (time.perf_counter() - t0) / 3 / B
-
-        for impl, t in [("reference", t_ref), ("vectorized", t_vec),
-                        ("jax", t_jax), ("jax_vmap8", t_batch)]:
-            csv.row("ceft_throughput", n, P, e, impl, f"{t * 1e3:.2f}",
-                    f"{1.0 / t:.1f}" if t == t else "nan",
-                    f"{t_ref / t:.1f}" if t == t and t_ref == t_ref else "nan")
+        e, t_vec = _battery(csv, json_rows, "ceft_throughput", "rgg_high",
+                            g, comp, m)
         fits.append((P * P * e, t_vec))
+
+        if idx == len(sizes) - 1:
+            # batched machines (vmap) -- 8 re-planning scenarios at once
+            B = 8
+            comps = np.repeat(comp[None], B, 0)
+            Ls = np.repeat(np.asarray(m.L, np.float32)[None], B, 0)
+            bws = np.repeat(np.asarray(m.bw, np.float32)[None], B, 0)
+            t_batch = _steady(lambda: ceft_jax_batch(g, comps, Ls, bws), reps=3) / B
+            _row(csv, json_rows, "ceft_throughput", "rgg_high", n, P, e,
+                 "jax_vmap8", t_batch, float("nan"), float("nan"))
+
+    # ---- irregular fan-in rows: where the dense padding degrades worst
+    # (GE is deep and narrow -- regular fan-in -- so it lives with the rgg
+    # rows' regime; the irregular set is driven by in-degree skew)
+    P = 16
+    irregular = [
+        ("star", star_fan_in(sz(4000, lo=256))),
+        ("heavytail", heavy_tail_fan_in(sz(4000, lo=256), rng)),
+        ("realworld_EW", epigenomics(sz(512, lo=48))),
+    ]
+    for graph_name, g in irregular:
+        wl = interval_workload(g, P, 1.0, 50, "high", rng)
+        g, comp, m = wl.graph, wl.comp, wl.machine
+        _battery(csv, json_rows, "ceft_irregular", graph_name, g, comp, m,
+                 ref_limit=600)
 
     # O(P^2 e) scaling fit on the vectorized impl
     x = np.log(np.asarray([f[0] for f in fits], float))
     y = np.log(np.asarray([f[1] for f in fits], float))
     slope = float(np.polyfit(x, y, 1)[0])
-    csv.row("ceft_complexity_fit", "-", "-", "-", "log-log slope vs P^2*e",
-            f"{slope:.3f}", "expect ~<= 1", "-")
+    csv.row("ceft_complexity_fit", "-", "-", "-", "-", "log-log slope vs P^2*e",
+            f"{slope:.3f}", "expect ~<= 1", "-", "-")
 
 
 if __name__ == "__main__":

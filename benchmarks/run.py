@@ -3,8 +3,15 @@ benches).  Each prints CSV to stdout; `python -m benchmarks.run` runs all.
 
   REPRO_BENCH_SCALE=0.25 python -m benchmarks.run     # quick pass
   python -m benchmarks.run --only table3 sweeps       # subset
+  python -m benchmarks.run --only ceft_throughput --json BENCH_ceft.json
+
+--json mirrors the CEFT-throughput CSV rows into a machine-readable perf
+trajectory file (schema: {"schema", "scale", "rows": [{impl, n, P, e, ms,
+speedup, ...}]}) so future perf PRs have a baseline to diff against; CI
+refreshes it on every pass (scripts/ci.sh).
 """
 import argparse
+import json
 import sys
 import time
 
@@ -12,6 +19,7 @@ import time
 def main() -> None:
     from . import (ceft_throughput, kernel_bench, partitioner_bench,
                    realworld, sweeps, table3)
+    from .common import scale
     suites = {
         "table3": table3.run,                      # Table 3 + Figs 5-6
         "sweeps": sweeps.run,                      # Figs 10-14
@@ -21,15 +29,34 @@ def main() -> None:
         "kernel": kernel_bench.run,                # kernel layer
         "partitioner": partitioner_bench.run,      # beyond-paper
     }
+    # suites whose run() mirrors rows into the --json trajectory file
+    json_suites = {"ceft_throughput": ceft_throughput.run}
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", choices=list(suites))
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write machine-readable perf rows (BENCH_ceft.json)")
     args = ap.parse_args()
     names = args.only or list(suites)
+    json_rows: list = []
     for name in names:
         print(f"\n# ==== {name} ====", flush=True)
         t0 = time.time()
-        suites[name]()
+        if args.json and name in json_suites:
+            json_suites[name](json_rows=json_rows)
+        else:
+            suites[name]()
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if args.json and not json_rows:
+        # don't clobber an existing baseline when the selected suites mirror
+        # nothing (e.g. --only sweeps --json ...)
+        print(f"# no JSON-mirroring suite selected; {args.json} not written",
+              flush=True)
+    elif args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "scale": scale(), "rows": json_rows},
+                      f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(json_rows)} rows to {args.json}", flush=True)
 
 
 if __name__ == '__main__':

@@ -40,5 +40,30 @@ if [ -n "$violations" ]; then
 fi
 echo "ci: profile choke-point invariant holds"
 
+# Level tables (ISSUE 3): the padded dense tables and the CSR level segments
+# are built only by core/taskgraph.py (padded_level_tables /
+# csr_level_segments).  No other module may reconstruct them by iterating
+# TaskGraph.levels() -- everything downstream consumes the taskgraph builders,
+# so the bucketing policy and tie-break ordering have a single owner.
+echo "ci: forbidden-API grep (level-table construction outside core/taskgraph.py)"
+violations=$(grep -rnE "\.levels\(\)|def padded_level_tables|def csr_level_segments" \
+    src/ benchmarks/ --include='*.py' | grep -v "^src/repro/core/taskgraph.py:" || true)
+if [ -n "$violations" ]; then
+    echo "ci: FAIL -- level tables constructed outside src/repro/core/taskgraph.py:"
+    echo "$violations"
+    exit 1
+fi
+echo "ci: level-table choke-point invariant holds"
+
 echo "ci: tier-1 tests"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+# Perf trajectory (ISSUE 3): refresh the machine-readable CEFT baseline on
+# every CI pass so perf PRs have a trajectory file to diff against.  The
+# shrunk scale keeps this a smoke-sized run; jax_csr rows are checked against
+# jax_padded (bit-identical) and the float64 numpy path inside the bench.
+echo "ci: CEFT perf baseline (BENCH_ceft.json, shrunk scale)"
+REPRO_BENCH_SCALE=0.05 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only ceft_throughput --json BENCH_ceft.json \
+    > /dev/null
+echo "ci: wrote BENCH_ceft.json"

@@ -13,13 +13,22 @@ from .machine import Machine, random_machine, uniform_machine
 from .metrics import slack, slr, speedup
 from .ranks import rank_ceft_down, rank_ceft_up, rank_d, rank_u
 from .schedule import Schedule, list_schedule, sequential_time, validate_schedule
-from .taskgraph import TaskGraph, from_edges, linear_chain, padded_level_tables
+from .taskgraph import (
+    LevelSegments,
+    TaskGraph,
+    csr_level_segments,
+    from_edge_arrays,
+    from_edges,
+    linear_chain,
+    padded_level_tables,
+)
 
 __all__ = [
-    "CeftResult", "Machine", "Schedule", "TaskGraph",
+    "CeftResult", "LevelSegments", "Machine", "Schedule", "TaskGraph",
     "averaged_critical_path", "ceft", "ceft_cpop", "ceft_heft_down",
     "ceft_heft_up", "ceft_reference", "chain_cost", "cpop", "cpop_cpl",
-    "from_edges", "heft", "heft_down", "linear_chain", "list_schedule",
+    "csr_level_segments", "from_edge_arrays", "from_edges", "heft",
+    "heft_down", "linear_chain", "list_schedule",
     "min_comp_critical_path", "padded_level_tables", "random_machine",
     "rank_ceft_down", "rank_ceft_up", "rank_d", "rank_u", "sequential_time",
     "slack", "slr", "speedup", "uniform_machine", "validate_schedule",

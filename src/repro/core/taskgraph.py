@@ -6,6 +6,11 @@ CSR form in both directions (children and parents), require vertex ids to be a
 topological order (the paper's Algorithm 1 assumes this), and pre-compute the
 longest-path *level* of every vertex so the vectorized CEFT sweep can process one
 level at a time.
+
+This module is the only place that builds level tables for the device sweeps:
+``padded_level_tables`` (the dense (n_levels, Wmax, Dmax) form) and
+``csr_level_segments`` (the edge-centric CSR form whose total size is O(v + e)).
+Everything else must consume these structures, not rebuild them.
 """
 from __future__ import annotations
 
@@ -68,8 +73,7 @@ class TaskGraph:
 
     def levels(self) -> list[np.ndarray]:
         """Vertices grouped by longest-path depth (each a topological batch)."""
-        order = np.argsort(self.level, kind="stable")
-        bounds = np.searchsorted(self.level[order], np.arange(self.n_levels + 1))
+        order, bounds = _level_order(self)
         return [order[bounds[k] : bounds[k + 1]] for k in range(self.n_levels)]
 
     # --------------------------------------------------------------- transforms
@@ -80,12 +84,9 @@ class TaskGraph:
         order of the transposed graph.
         """
         n = self.n
-        remap = n - 1 - np.arange(n)
-        edges = []
-        for i in range(n):
-            for j, d in zip(self.children(i), self.child_data(i)):
-                edges.append((remap[j], remap[i], d))
-        return from_edges(n, edges)
+        remap = n - 1 - np.arange(n, dtype=np.int32)
+        src = np.repeat(np.arange(n, dtype=np.int32), self.out_degree)
+        return from_edge_arrays(n, remap[self.cindices], remap[src], self.cdata)
 
     def with_virtual_source_sink(self) -> tuple["TaskGraph", int, int]:
         """Add a zero-cost virtual entry/exit if the graph has several of either.
@@ -100,38 +101,45 @@ class TaskGraph:
             return self, -1, -1
         off = 1 if add_src else 0
         n = self.n + off + (1 if add_snk else 0)
-        edges: list[tuple[int, int, float]] = []
-        for i in range(self.n):
-            for j, d in zip(self.children(i), self.child_data(i)):
-                edges.append((i + off, j + off, float(d)))
+        src = np.repeat(np.arange(self.n, dtype=np.int64), self.out_degree) + off
+        dst = self.cindices.astype(np.int64) + off
+        dat = self.cdata.astype(np.float64)
         vsrc = 0 if add_src else -1
         vsink = n - 1 if add_snk else -1
         if add_src:
-            for s in srcs:
-                edges.append((0, int(s) + off, 0.0))
+            src = np.concatenate([src, np.zeros(len(srcs), np.int64)])
+            dst = np.concatenate([dst, srcs.astype(np.int64) + off])
+            dat = np.concatenate([dat, np.zeros(len(srcs))])
         if add_snk:
-            for s in snks:
-                edges.append((int(s) + off, n - 1, 0.0))
-        return from_edges(n, edges), vsrc, vsink
+            src = np.concatenate([src, snks.astype(np.int64) + off])
+            dst = np.concatenate([dst, np.full(len(snks), n - 1, np.int64)])
+            dat = np.concatenate([dat, np.zeros(len(snks))])
+        return from_edge_arrays(n, src, dst, dat), vsrc, vsink
 
 
-def from_edges(
-    n: int, edges: Iterable[tuple[int, int, float]], *, sort_topologically: bool = False
+def _csr_ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Flat indices [starts[i] .. starts[i]+counts[i]) concatenated (the
+    vectorized multi-row CSR gather)."""
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, np.int64)
+    first = np.cumsum(counts) - counts
+    return np.repeat(starts, counts) + (np.arange(total) - np.repeat(first, counts))
+
+
+def from_edge_arrays(
+    n: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    data: np.ndarray,
+    *,
+    sort_topologically: bool = False,
 ) -> TaskGraph:
-    """Build a TaskGraph from (src, dst, data) triples.
-
-    Vertex ids must already be a topological order (src < dst) unless
-    ``sort_topologically`` is set, in which case we relabel via Kahn's algorithm.
-    """
-    e = list(edges)
-    if e:
-        src = np.asarray([x[0] for x in e], dtype=np.int32)
-        dst = np.asarray([x[1] for x in e], dtype=np.int32)
-        dat = np.asarray([x[2] for x in e], dtype=np.float64)
-    else:
-        src = np.zeros(0, np.int32)
-        dst = np.zeros(0, np.int32)
-        dat = np.zeros(0, np.float64)
+    """Array form of :func:`from_edges` — the fast path for large graphs
+    (no Python loop over edges anywhere in the build)."""
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    dat = np.asarray(data, dtype=np.float64)
     if src.size and not (src < dst).all():
         if not sort_topologically:
             raise ValueError("edges must satisfy src < dst (topological ids); "
@@ -153,13 +161,49 @@ def from_edges(
 
     cindptr, cindices, cdata = csr(src, dst, dat)
     pindptr, pindices, pdata = csr(dst, src, dat)
-
-    level = np.zeros(n, np.int32)
-    for i in range(n):  # ids are topological, single pass suffices
-        ps = pindices[pindptr[i] : pindptr[i + 1]]
-        if ps.size:
-            level[i] = level[ps].max() + 1
+    level = _levels_from_csr(n, cindptr, cindices, pindptr)
     return TaskGraph(n, cindptr, cindices, cdata, pindptr, pindices, pdata, level)
+
+
+def from_edges(
+    n: int, edges: Iterable[tuple[int, int, float]], *, sort_topologically: bool = False
+) -> TaskGraph:
+    """Build a TaskGraph from (src, dst, data) triples.
+
+    Vertex ids must already be a topological order (src < dst) unless
+    ``sort_topologically`` is set, in which case we relabel via Kahn's algorithm.
+    """
+    e = list(edges)
+    if e:
+        arr = np.asarray(e, dtype=np.float64).reshape(len(e), 3)
+        src = arr[:, 0].astype(np.int32)
+        dst = arr[:, 1].astype(np.int32)
+        dat = arr[:, 2]
+    else:
+        src = np.zeros(0, np.int32)
+        dst = np.zeros(0, np.int32)
+        dat = np.zeros(0, np.float64)
+    return from_edge_arrays(n, src, dst, dat, sort_topologically=sort_topologically)
+
+
+def _levels_from_csr(
+    n: int, cindptr: np.ndarray, cindices: np.ndarray, pindptr: np.ndarray
+) -> np.ndarray:
+    """Longest-path depth of every vertex, one vectorized wavefront per level
+    (replaces the per-vertex Python loop; O(depth) numpy passes)."""
+    level = np.zeros(n, np.int32)
+    remaining = np.diff(pindptr).astype(np.int64)
+    frontier = np.nonzero(remaining == 0)[0]
+    while frontier.size:
+        counts = cindptr[frontier + 1] - cindptr[frontier]
+        offs = _csr_ranges(cindptr[frontier], counts)
+        if offs.size == 0:
+            break
+        dst = cindices[offs]
+        np.maximum.at(level, dst, np.repeat(level[frontier] + 1, counts))
+        np.add.at(remaining, dst, -1)
+        frontier = np.unique(dst[remaining[dst] == 0])
+    return level
 
 
 def _topo_order(n: int, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
@@ -186,6 +230,23 @@ def linear_chain(n: int, data: float = 1.0) -> TaskGraph:
     return from_edges(n, [(i, i + 1, data) for i in range(n - 1)])
 
 
+# --------------------------------------------------------------- level tables
+def _level_order(g: TaskGraph) -> tuple[np.ndarray, np.ndarray]:
+    """(order, bounds): vertices stably sorted by level (ascending id within a
+    level) and the per-level start offsets into ``order``."""
+    order = np.argsort(g.level, kind="stable")
+    bounds = np.searchsorted(g.level[order], np.arange(g.n_levels + 1))
+    return order, bounds
+
+
+def _slots_from_order(g: TaskGraph, order: np.ndarray, bounds: np.ndarray) -> np.ndarray:
+    """Within-level position of every vertex under the :meth:`TaskGraph.levels`
+    ordering (ascending vertex id within a level)."""
+    slot = np.empty(g.n, np.int32)
+    slot[order] = (np.arange(g.n) - bounds[g.level[order]]).astype(np.int32)
+    return slot
+
+
 def padded_level_tables(g: TaskGraph) -> dict[str, np.ndarray]:
     """Fixed-shape per-level tables for the jittable CEFT sweep.
 
@@ -195,18 +256,82 @@ def padded_level_tables(g: TaskGraph) -> dict[str, np.ndarray]:
       pdata  : data volume on the parent edge (0 where padded)
     Level 0 rows are sources (no parents).
     """
-    lvls = g.levels()
-    n_levels = len(lvls)
-    width = max((len(l) for l in lvls), default=0)
-    dmax = max(1, int(g.in_degree.max()) if g.n else 1)
+    order, bounds = _level_order(g)
+    n_levels = g.n_levels
+    widths = np.diff(bounds)
+    width = int(widths.max()) if n_levels else 0
+    indeg = g.in_degree
+    dmax = max(1, int(indeg.max()) if g.n else 1)
     tasks = np.full((n_levels, width), -1, np.int32)
     par = np.full((n_levels, width, dmax), -1, np.int32)
     pdat = np.zeros((n_levels, width, dmax), np.float32)
-    for li, l in enumerate(lvls):
-        tasks[li, : len(l)] = l
-        for wi, t in enumerate(l):
-            ps = g.parents(int(t))
-            ds = g.parent_data(int(t))
-            par[li, wi, : len(ps)] = ps
-            pdat[li, wi, : len(ps)] = ds
+    if g.n == 0:
+        return {"tasks": tasks, "par": par, "pdata": pdat}
+    slot = _slots_from_order(g, order, bounds)
+    tasks[g.level[order], slot[order]] = order
+    # scatter every parent edge into its (level, slot, k) cell in one pass
+    edst = np.repeat(np.arange(g.n, dtype=np.int64), indeg)
+    k = np.arange(g.n_edges) - np.repeat(g.pindptr[:-1], indeg)
+    par[g.level[edst], slot[edst], k] = g.pindices
+    pdat[g.level[edst], slot[edst], k] = g.pdata
     return {"tasks": tasks, "par": par, "pdata": pdat}
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSegments:
+    """Edge-centric CSR level structure: the O(v + e) alternative to
+    :func:`padded_level_tables` (ISSUE 3; paper §5's O(P²e) bound).
+
+    Vertices are ordered by (level, id); each level's parent edges form one
+    contiguous run, ordered by (child slot, parent id) so per-child segments
+    are contiguous and tie-breaking matches the dense formulation (first
+    maximal parent in ascending-id order wins).
+
+      task_ids    : (n,)  vertex ids sorted by (level, id)
+      task_bounds : (n_levels+1,) level k's tasks are task_ids[tb[k]:tb[k+1]]
+      edge_src    : (e,)  parent vertex id per edge
+      edge_data   : (e,)  data volume per edge
+      edge_seg    : (e,)  within-level slot of the child vertex (segment id)
+      edge_bounds : (n_levels+1,) level k's edges are rows eb[k]:eb[k+1]
+    """
+    task_ids: np.ndarray
+    task_bounds: np.ndarray
+    edge_src: np.ndarray
+    edge_data: np.ndarray
+    edge_seg: np.ndarray
+    edge_bounds: np.ndarray
+
+    @property
+    def n_levels(self) -> int:
+        return int(self.task_bounds.shape[0]) - 1
+
+    def level_tasks(self, k: int) -> np.ndarray:
+        return self.task_ids[self.task_bounds[k] : self.task_bounds[k + 1]]
+
+    def level_edges(self, k: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        s = slice(self.edge_bounds[k], self.edge_bounds[k + 1])
+        return self.edge_src[s], self.edge_data[s], self.edge_seg[s]
+
+
+def csr_level_segments(g: TaskGraph) -> LevelSegments:
+    """Flatten each level's parent edges into contiguous segments.
+
+    The parents-CSR is already ordered by (child, parent); a stable sort of
+    edges by the child's level groups each level's edges contiguously while
+    preserving that order, so within a level edges run over children in slot
+    order with each child's parents in ascending-id order.
+    """
+    order, bounds = _level_order(g)
+    slot = _slots_from_order(g, order, bounds)
+    indeg = g.in_degree
+    edst = np.repeat(np.arange(g.n, dtype=np.int64), indeg)
+    eorder = np.argsort(g.level[edst], kind="stable")
+    edge_bounds = np.searchsorted(g.level[edst][eorder], np.arange(g.n_levels + 1))
+    return LevelSegments(
+        task_ids=order.astype(np.int32),
+        task_bounds=bounds.astype(np.int64),
+        edge_src=g.pindices[eorder].astype(np.int32),
+        edge_data=g.pdata[eorder],
+        edge_seg=slot[edst[eorder]],
+        edge_bounds=edge_bounds.astype(np.int64),
+    )

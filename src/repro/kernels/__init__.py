@@ -3,10 +3,15 @@
 minplus    : blocked tropical (min-plus) matmul
 ceft_relax : fused CEFT level relaxation (min over parent classes -> masked max
              over parents) with argmin/argmax path bookkeeping
+edge_relax : segment-tiled edge-centric relaxation for the CSR CEFT sweep
+             (per-edge min over parent classes; O(e·P²) work, VMEM-resident)
 ref        : pure-jnp oracles; every kernel is validated against these in
              interpret mode across shape/dtype sweeps (tests/test_kernels.py)
 """
-from .ops import ceft_relax, minplus, pallas_relax
+from .ops import ceft_relax, edge_relax, minplus, pallas_edge_relax, pallas_relax
 from . import ref
 
-__all__ = ["ceft_relax", "minplus", "pallas_relax", "ref"]
+__all__ = [
+    "ceft_relax", "edge_relax", "minplus", "pallas_edge_relax",
+    "pallas_relax", "ref",
+]

@@ -64,6 +64,58 @@ def _relax_kernel(pv_ref, pdata_ref, valid_ref, L_ref, bw_ref, max_ref, argk_ref
     argl_ref[...] = run_argl
 
 
+def _edge_relax_kernel(pv_ref, pdata_ref, L_ref, bw_ref, min_ref, argl_ref):
+    """Segment-tiled edge relaxation (ISSUE 3): one tile = block_e contiguous
+    edges of a level's CSR segment run.  Builds only a (block_e, P, P)
+    candidate tile in VMEM -- the O(e·P²) work of the CSR sweep with no
+    (W, D) padding -- and reduces over the parent class in-register.  The
+    per-child ``segment_max`` stays in XLA where the scatter is native."""
+    pv = pv_ref[...]          # (block_e, P)
+    pdata = pdata_ref[...]    # (block_e,)
+    L = L_ref[...]            # (P,)
+    bw = bw_ref[...]          # (P, P)
+    P = pv.shape[1]
+    off = 1.0 - jnp.eye(P, dtype=pv.dtype)
+    comm = (L[None, :, None] + pdata[:, None, None] / bw[None]) * off  # (E,Pl,Pj)
+    cand = pv[:, :, None] + comm                                       # (E,Pl,Pj)
+    min_ref[...] = jnp.min(cand, axis=1)
+    argl_ref[...] = jnp.argmin(cand, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def edge_relax_pallas(
+    pv: jnp.ndarray,      # (E, P) gathered parent CEFT values, float32
+    pdata: jnp.ndarray,   # (E,)   data volume per edge, float32
+    L: jnp.ndarray,       # (P,)   float32
+    bw: jnp.ndarray,      # (P, P) float32
+    *,
+    block_e: int = 128,
+    interpret: bool = False,
+):
+    E, P = pv.shape
+    assert E % block_e == 0, "pad via ops.edge_relax"
+    grid = (E // block_e,)
+    return pl.pallas_call(
+        _edge_relax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, P), lambda i: (i, 0)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((P,), lambda i: (0,)),
+            pl.BlockSpec((P, P), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, P), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, P), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((E, P), pv.dtype),
+            jax.ShapeDtypeStruct((E, P), jnp.int32),
+        ],
+        interpret=interpret,
+    )(pv, pdata, L, bw)
+
+
 @functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
 def ceft_relax_pallas(
     pv: jnp.ndarray,      # (W, D, P) float32

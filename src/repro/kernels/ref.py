@@ -15,6 +15,19 @@ def minplus_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
 
 
+def edge_relax_ref(pv, pdata, L, bw):
+    """Edge-centric relaxation oracle (the CSR sweep's inner contraction).
+
+    pv: (E, P) gathered parent CEFT values; pdata: (E,); L: (P,); bw: (P, P).
+    Returns (minl (E, P), argl (E, P) int32).
+    """
+    P = L.shape[0]
+    off = 1.0 - jnp.eye(P, dtype=pv.dtype)
+    comm = (L[:, None] + pdata[:, None, None] / bw) * off           # (E,Pl,Pj)
+    cand = pv[:, :, None] + comm                                     # (E,Pl,Pj)
+    return jnp.min(cand, axis=1), jnp.argmin(cand, axis=1).astype(jnp.int32)
+
+
 def ceft_relax_ref(pv, pdata, validp, L, bw):
     """One CEFT level relaxation (paper eq. 4 inner loops), dense form.
 

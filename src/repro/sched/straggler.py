@@ -38,6 +38,27 @@ class StragglerMonitor:
         self.ewma = np.ones(n_classes) * np.nan
         self.baseline = np.ones(n_classes) * np.nan
         self.events: list[StragglerEvent] = []
+        # nominal-schedule cache: the baseline CEFT-CPOP depends only on
+        # (graph, comp, machine), not on the triggering event -- recomputing it
+        # per event doubled the replan cost.  The graph is keyed by identity
+        # (held so its id cannot be recycled); cost arrays are compared by
+        # value (copies held) so in-place mutation of comp / m.L / m.bw cannot
+        # serve a stale baseline.
+        self._nominal_key: tuple | None = None
+        self._nominal_sched = None
+
+    def _nominal(self, g: TaskGraph, comp: np.ndarray, m: Machine):
+        stale = (
+            self._nominal_key is None
+            or self._nominal_key[0] is not g
+            or not np.array_equal(self._nominal_key[1], comp)
+            or not np.array_equal(self._nominal_key[2], m.L)
+            or not np.array_equal(self._nominal_key[3], m.bw)
+        )
+        if stale:
+            self._nominal_sched = ceft_cpop(g, comp, m, ceft(g, comp, m))
+            self._nominal_key = (g, comp.copy(), np.copy(m.L), np.copy(m.bw))
+        return self._nominal_sched
 
     def observe(self, class_times: np.ndarray) -> np.ndarray:
         """Update EWMAs; returns per-class slowdown factors (>= 1)."""
@@ -56,7 +77,7 @@ class StragglerMonitor:
         if (slow < self.threshold).all():
             return None, None
         degraded = comp * slow[None, :]
-        base = ceft_cpop(g, comp, m, ceft(g, comp, m))
+        base = self._nominal(g, comp, m)
         new = ceft_cpop(g, degraded, m, ceft(g, degraded, m))
         worst = int(np.argmax(slow))
         ev = StragglerEvent(step, worst, float(slow[worst]),

@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.kernels import ceft_relax, minplus, pallas_relax
-from repro.kernels.ref import ceft_relax_ref, minplus_ref
+from repro.kernels import ceft_relax, edge_relax, minplus, pallas_edge_relax, pallas_relax
+from repro.kernels.ref import ceft_relax_ref, edge_relax_ref, minplus_ref
 
 SHAPES_MINPLUS = [(4, 3, 5), (128, 16, 128), (300, 37, 260), (1, 1, 1),
                   (257, 129, 255), (16, 256, 16)]
@@ -81,6 +81,46 @@ def test_ceft_jax_with_pallas_relax_end_to_end(seed):
     b = ceft_jax(g, comp, m, relax=pallas_relax)
     np.testing.assert_allclose(b.ceft, a.ceft, rtol=2e-5)
     assert b.cpl == pytest.approx(a.cpl, rel=2e-5)
+
+
+EDGE_SHAPES = [(5, 3), (128, 16), (300, 7), (1, 1), (257, 13), (64, 64)]
+
+
+@pytest.mark.parametrize("shape", EDGE_SHAPES)
+def test_edge_relax_matches_ref(shape):
+    """Segment-tiled edge relaxation (the CSR sweep's Pallas inner loop)."""
+    E, P = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    pv = jnp.asarray(rng.uniform(0, 100, (E, P)), jnp.float32)
+    pdata = jnp.asarray(rng.uniform(0, 10, (E,)), jnp.float32)
+    L = jnp.asarray(rng.uniform(0, 2, (P,)), jnp.float32)
+    bw = jnp.asarray(rng.uniform(0.5, 2, (P, P)), jnp.float32)
+    got = edge_relax(pv, pdata, L, bw)
+    want = edge_relax_ref(pv, pdata, L, bw)
+    for g, w, name in zip(got, want, ["minl", "argl"]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10)
+def test_ceft_jax_csr_with_pallas_edge_relax_end_to_end(seed):
+    """The CSR DP sweep with the segment-tiled Pallas kernel plugged in
+    reproduces the numpy Algorithm-1 results (values and backtracked path)."""
+    from repro.core import ceft, random_machine
+    from repro.core.ceft_jax import ceft_jax_csr
+    from conftest import make_random_dag
+
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 10))
+    P = int(rng.integers(1, 5))
+    g = make_random_dag(n, 0.4, rng)
+    comp = rng.uniform(1, 10, size=(n, P))
+    m = random_machine(P, rng, L_range=(0.0, 1.0))
+    a = ceft(g, comp, m)
+    b = ceft_jax_csr(g, comp, m, relax=pallas_edge_relax)
+    np.testing.assert_allclose(b.ceft, a.ceft, rtol=2e-5)
+    assert b.cpl == pytest.approx(a.cpl, rel=2e-5)
+    assert b.path == a.path
 
 
 @pytest.mark.parametrize("shape", [(8, 3, 4), (16, 7, 13)])
