@@ -1,0 +1,91 @@
+"""Perf-regression gate over BENCH_ceft.json (ISSUE 4).
+
+Diffs a freshly produced trajectory file against the committed baseline and
+fails on a real slowdown of the gated implementation's rows, turning
+BENCH_ceft.json from an advisory artifact into an enforced trajectory:
+
+    python -m benchmarks.check_regression BASELINE FRESH \
+        [--impl jax_csr] [--threshold 2.0] [--abs-floor-ms 0.5]
+
+Rows are matched on (bench, graph, impl, n, P, e).  A fresh row fails when it
+is more than ``threshold`` x its baseline AND the absolute slowdown exceeds
+``abs_floor_ms`` — smoke-scale rows are sub-millisecond, where a 2x blip is
+scheduler noise, not a regression.  Rows absent from the baseline are skipped
+(new benches never fail the gate), but zero matched rows is itself a failure
+(a renamed bench must not silently disarm the gate).  A scale mismatch between
+the two files is a hard failure: cross-scale timings are not comparable, so
+the committed baseline must be regenerated at the new scale.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _key(row: dict) -> tuple:
+    return (row.get("bench"), row.get("graph"), row.get("impl"),
+            row.get("n"), row.get("P"), row.get("e"))
+
+
+def check(baseline: dict, fresh: dict, *, impl: str = "jax_csr",
+          threshold: float = 2.0, abs_floor_ms: float = 0.5) -> list[str]:
+    """Returns the list of failure messages (empty == gate passes).
+
+    ``impl`` matches by prefix so the gate covers the whole implementation
+    family — ``--impl jax_csr`` gates ``jax_csr`` AND ``jax_csr_vmap8`` (the
+    batched re-planning row), not just the exact string."""
+    if baseline.get("scale") != fresh.get("scale"):
+        return [f"scale mismatch: baseline {baseline.get('scale')} vs fresh "
+                f"{fresh.get('scale')} -- regenerate the committed baseline"]
+    base_ms = {_key(r): r["ms"] for r in baseline.get("rows", [])
+               if str(r.get("impl", "")).startswith(impl)}
+    failures: list[str] = []
+    matched = 0
+    for row in fresh.get("rows", []):
+        if not str(row.get("impl", "")).startswith(impl):
+            continue
+        k = _key(row)
+        if k not in base_ms:  # new bench/graph: no baseline to regress against
+            continue
+        matched += 1
+        old, new = base_ms[k], row["ms"]
+        if new > threshold * old and new - old > abs_floor_ms:
+            failures.append(
+                f"{row['bench']}/{row['graph']} (n={row['n']}, P={row['P']}): "
+                f"{old:.3f}ms -> {new:.3f}ms ({new / old:.2f}x > {threshold}x)")
+    if matched == 0:
+        failures.append(
+            f"no fresh '{impl}' rows matched the baseline -- the gate is "
+            "disarmed; regenerate the committed BENCH_ceft.json")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_ceft.json")
+    ap.add_argument("fresh", help="freshly produced BENCH_ceft.json")
+    ap.add_argument("--impl", default="jax_csr")
+    ap.add_argument("--threshold", type=float, default=2.0)
+    ap.add_argument("--abs-floor-ms", type=float, default=0.5)
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = check(baseline, fresh, impl=args.impl, threshold=args.threshold,
+                     abs_floor_ms=args.abs_floor_ms)
+    if failures:
+        print(f"check_regression: FAIL ({len(failures)} finding(s)):")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    n = sum(1 for r in fresh.get("rows", [])
+            if str(r.get("impl", "")).startswith(args.impl))
+    print(f"check_regression: OK -- {n} '{args.impl}*' row(s) within "
+          f"{args.threshold}x of the baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

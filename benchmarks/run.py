@@ -52,8 +52,10 @@ def main() -> None:
         print(f"# no JSON-mirroring suite selected; {args.json} not written",
               flush=True)
     elif args.json:
+        import jax  # record the producing version: the CI gate pins the range
         with open(args.json, "w") as f:
-            json.dump({"schema": 1, "scale": scale(), "rows": json_rows},
+            json.dump({"schema": 1, "scale": scale(),
+                       "jax_version": jax.__version__, "rows": json_rows},
                       f, indent=2)
             f.write("\n")
         print(f"# wrote {len(json_rows)} rows to {args.json}", flush=True)

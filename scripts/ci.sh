@@ -4,6 +4,27 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# jax version pin (ISSUE 4): the substrate + CEFT sweeps are validated on the
+# 0.4.x line and the 0.6+ mesh API; anything else (0.5.x, pre-0.4) fails fast
+# here instead of surfacing as cryptic trace errors mid-suite.  The producing
+# version is also recorded into BENCH_ceft.json metadata by benchmarks/run.py.
+echo "ci: jax version gate (supported window: 0.4.x / 0.6+)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import re
+import sys
+
+import jax
+
+v = jax.__version__
+m = re.match(r"(\d+)\.(\d+)", v)
+mm = (int(m.group(1)), int(m.group(2))) if m else None
+if mm is None or not (mm == (0, 4) or mm >= (0, 6)):
+    sys.exit(f"ci: FAIL -- jax {v} is outside the supported 0.4.x / 0.6+ "
+             "window (0.5.x changed mesh/shard_map semantics mid-flight and "
+             "is not validated; upgrade to 0.6+ or pin 0.4.x)")
+print(f"ci: jax {v} is inside the supported window")
+PY
+
 # optional dev deps -- the suite must also pass without them (property tests
 # auto-skip via tests/_hyp.py), so a failed install is not an error
 if command -v pip >/dev/null 2>&1; then
@@ -55,15 +76,47 @@ if [ -n "$violations" ]; then
 fi
 echo "ci: level-table choke-point invariant holds"
 
+# Bucketing policy (ISSUE 4): the jit-shape buckets (_geo_bucket), the
+# fusion + hybrid-layout thresholds (CSR_FUSE_WASTE / CSR_DENSE_SKEW) and
+# the CSR_TRACES counters are owned by core/ceft_jax.py alone, matching the
+# level-table gate above -- everything else consumes csr_device_inputs /
+# fuse_levels outputs, so changing the bucket policy (and hence what
+# recompiles) has a single owner.
+echo "ci: forbidden-API grep (CSR bucket policy outside core/ceft_jax.py)"
+violations=$(grep -rnE "CSR_TRACES|CSR_FUSE|CSR_DENSE|_bucket\(|def _geo_bucket" \
+    src/ benchmarks/ --include='*.py' | grep -v "^src/repro/core/ceft_jax.py:" || true)
+if [ -n "$violations" ]; then
+    echo "ci: FAIL -- CSR bucket policy accessed outside src/repro/core/ceft_jax.py:"
+    echo "$violations"
+    exit 1
+fi
+echo "ci: bucket-policy choke-point invariant holds"
+
 echo "ci: tier-1 tests"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
-# Perf trajectory (ISSUE 3): refresh the machine-readable CEFT baseline on
-# every CI pass so perf PRs have a trajectory file to diff against.  The
-# shrunk scale keeps this a smoke-sized run; jax_csr rows are checked against
-# jax_padded (bit-identical) and the float64 numpy path inside the bench.
+# Perf trajectory + regression gate (ISSUE 3 + 4): refresh the
+# machine-readable CEFT baseline on every CI pass, then diff the fresh rows
+# against the *committed* baseline -- a >2x slowdown of any jax_csr row fails
+# CI (tolerant of smoke-scale noise via the absolute-ms floor; rows absent
+# from the baseline are skipped).  The committed baseline is assumed to come
+# from comparable hardware (each passing CI run rewrites it, so committing
+# the refreshed file keeps the baseline anchored to the CI machine); on a
+# much slower box, regenerate the baseline once before trusting the gate.
+# The shrunk scale keeps this a smoke-sized run; jax_csr rows are checked
+# against jax_padded (bit-identical) and the float64 numpy path inside the
+# bench.
 echo "ci: CEFT perf baseline (BENCH_ceft.json, shrunk scale)"
+baseline=$(mktemp)
+trap 'rm -f "$baseline"' EXIT
+if ! git show HEAD:BENCH_ceft.json > "$baseline" 2>/dev/null; then
+    cp BENCH_ceft.json "$baseline"   # no git history: gate against last run
+fi
 REPRO_BENCH_SCALE=0.05 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --only ceft_throughput --json BENCH_ceft.json \
     > /dev/null
 echo "ci: wrote BENCH_ceft.json"
+echo "ci: perf-regression gate (fresh jax_csr rows vs committed baseline)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.check_regression "$baseline" BENCH_ceft.json \
+    --impl jax_csr --threshold 2.0

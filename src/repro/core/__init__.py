@@ -14,22 +14,26 @@ from .metrics import slack, slr, speedup
 from .ranks import rank_ceft_down, rank_ceft_up, rank_d, rank_u
 from .schedule import Schedule, list_schedule, sequential_time, validate_schedule
 from .taskgraph import (
+    FusedLevelRun,
     LevelSegments,
     TaskGraph,
+    csr_batch_segments,
     csr_level_segments,
     from_edge_arrays,
     from_edges,
+    fuse_levels,
     linear_chain,
     padded_level_tables,
 )
 
 __all__ = [
-    "CeftResult", "LevelSegments", "Machine", "Schedule", "TaskGraph",
-    "averaged_critical_path", "ceft", "ceft_cpop", "ceft_heft_down",
-    "ceft_heft_up", "ceft_reference", "chain_cost", "cpop", "cpop_cpl",
-    "csr_level_segments", "from_edge_arrays", "from_edges", "heft",
-    "heft_down", "linear_chain", "list_schedule",
-    "min_comp_critical_path", "padded_level_tables", "random_machine",
-    "rank_ceft_down", "rank_ceft_up", "rank_d", "rank_u", "sequential_time",
-    "slack", "slr", "speedup", "uniform_machine", "validate_schedule",
+    "CeftResult", "FusedLevelRun", "LevelSegments", "Machine", "Schedule",
+    "TaskGraph", "averaged_critical_path", "ceft", "ceft_cpop",
+    "ceft_heft_down", "ceft_heft_up", "ceft_reference", "chain_cost", "cpop",
+    "cpop_cpl", "csr_batch_segments", "csr_level_segments",
+    "from_edge_arrays", "from_edges", "fuse_levels", "heft", "heft_down",
+    "linear_chain", "list_schedule", "min_comp_critical_path",
+    "padded_level_tables", "random_machine", "rank_ceft_down",
+    "rank_ceft_up", "rank_d", "rank_u", "sequential_time", "slack", "slr",
+    "speedup", "uniform_machine", "validate_schedule",
 ]

@@ -13,16 +13,24 @@ shape the MXU/VPU wants.  Two device formulations:
     (n_levels, Wmax, Dmax) level tables.  Simple, but its work is
     O(levels · Wmax · Dmax · P²): on irregular fan-in graphs that is
     overwhelmingly padding.
-  * ``ceft_jax_csr`` — the edge-centric CSR sweep (ISSUE 3): per level, gather
-    parent CEFT values per *edge*, form only (E_level, P, P) candidates, min
-    over the parent class, then ``jax.ops.segment_max`` over each child's
-    contiguous parent segment.  Total work O(e·P²) — the paper's §5 bound.
-    Level shapes are padded to power-of-two buckets so the jitted per-level
-    step compiles a bounded O(log) set of shapes across graphs instead of one
-    trace per (n_levels, Wmax, Dmax, v) tuple.
+  * ``ceft_jax_csr`` — the fused hybrid sweep (ISSUE 3 + 4): adjacent levels
+    are fused into super-step runs, each ``lax.scan``ned in one dispatch
+    (level-0 init folded into the first).  Per run the layout adapts: no
+    within-level in-degree skew -> run-local dense (R, W, D) tables driven
+    through the same body as ``ceft_jax``; skewed fan-in -> the edge-centric
+    segment layout (gather parent CEFT values per *edge*, form only
+    (E_level, P, P) candidates, min over the parent class, then
+    ``jax.ops.segment_max`` over each child's contiguous parent segment —
+    O(e·P²) total, the paper's §5 bound).  All shapes are bucketed so sweeps
+    compile a bounded O(log) set of traces across graphs instead of one per
+    (n_levels, Wmax, Dmax, v) tuple.
+  * ``ceft_jax_batch_csr`` — the batched re-planning form (ISSUE 4): a
+    module-level jitted vmap over cost planes / machines with the fused
+    segment tables shared across the batch (the straggler loop's shape).
 
 ``relax_fn`` plugs in the Pallas kernels (repro.kernels) in place of the XLA
-contractions; all formulations compute identical values (tests assert this).
+edge contraction (segment-layout runs; dense-layout runs use the XLA dense
+relax); all formulations compute identical values (tests assert this).
 """
 from __future__ import annotations
 
@@ -35,7 +43,15 @@ import numpy as np
 
 from .ceft import CeftResult, _finalize
 from .machine import Machine
-from .taskgraph import TaskGraph, csr_level_segments, padded_level_tables
+from .taskgraph import (
+    TaskGraph,
+    csr_batch_segments,
+    csr_level_segments,
+    fuse_levels,
+    fuse_levels_dense,
+    padded_level_tables,
+    stack_cost_planes,
+)
 
 NEG = jnp.float32(-3.4e38)
 
@@ -59,10 +75,11 @@ def xla_relax(pv, pdata, validp, L, bw):
     return maxk, argk, argl_sel
 
 
-def _sweep_impl(tables, comp_pad, L, bw, relax: Callable = xla_relax):
-    v = comp_pad.shape[0] - 1  # last row is the padding scratch slot
-    P = comp_pad.shape[1]
-
+def _dense_level_body(v: int, comp_pad, L, bw, relax: Callable):
+    """The dense per-level scan body, shared verbatim by the whole-graph
+    padded sweep (``_sweep``) and the run-local dense-layout super-steps
+    (``_dense_superstep_impl``) so the two lower identically — the fused
+    hybrid sweep stays bit-identical to ``ceft_jax`` by construction."""
     def body(carry, xs):
         ceft_arr, ptask, pproc = carry
         tasks, par, pdata = xs
@@ -84,6 +101,13 @@ def _sweep_impl(tables, comp_pad, L, bw, relax: Callable = xla_relax):
         pproc = pproc.at[tt].set(jnp.where(keep, pl, pproc[tt]))
         return (ceft_arr, ptask, pproc), None
 
+    return body
+
+
+def _sweep_impl(tables, comp_pad, L, bw, relax: Callable = xla_relax):
+    v = comp_pad.shape[0] - 1  # last row is the padding scratch slot
+    P = comp_pad.shape[1]
+    body = _dense_level_body(v, comp_pad, L, bw, relax)
     init = (
         jnp.zeros((v + 1, P), comp_pad.dtype),
         jnp.full((v + 1, P), -1, jnp.int32),
@@ -163,11 +187,36 @@ def xla_edge_relax(pv, pdata, L, bw):
     return jnp.min(cand, axis=1), jnp.argmin(cand, axis=1).astype(jnp.int32)
 
 
-def _bucket(n: int, minimum: int = 8) -> int:
-    """Smallest power of two >= n (and >= minimum): the jit-shape bucket."""
-    b = minimum
-    while b < n:
-        b <<= 1
+# --- bucket policy (single owner: this module; ci.sh greps the invariant) ---
+# fusion waste budget: adjacent levels fuse into one scanned super-step as
+# long as the run's padded work (R · (W_b + E_b) at the run-max buckets) stays
+# within this factor of the real work -- trading a little padded compute for
+# far fewer dispatches (the Python-dispatch overhead is what made deep narrow
+# graphs lose to the dense scan)
+CSR_FUSE_WASTE = 4.0
+
+# hybrid layout threshold: a fused run takes the dense (R, W, D) layout when
+# its width·fan-in bucket is within this factor of its edge bucket (no
+# within-level in-degree skew — chains, GE, layered DAGs); skewed runs (star
+# fan-in, heavy tails) keep the O(e) segment layout
+CSR_DENSE_SKEW = 1.5
+
+
+def _geo_bucket(r: int) -> int:
+    """The jit-shape bucket: the √2-spaced grid {1,2,3,4,6,8,12,16,24,...}.
+
+    Still O(log) distinct values (bounded traces), but padding wastes <= 1/3
+    extra work instead of pow2's almost-2x.  Used for every bucketed axis:
+    vertex count, per-level width / edge cap, fan-in depth, source count,
+    and fused run length."""
+    b = 1
+    while b < r:
+        if b < 2:
+            b = 2
+        elif (b & (b - 1)) == 0:  # pow2 -> pow2 * 1.5
+            b += b // 2
+        else:                     # pow2 * 1.5 -> next pow2
+            b = (b // 3) * 4
     return b
 
 
@@ -176,142 +225,491 @@ def _bucket(n: int, minimum: int = 8) -> int:
 CSR_TRACES: dict[tuple, int] = {}
 
 
-@functools.partial(
-    jax.jit, donate_argnums=(0, 1, 2), static_argnames=("num_segments", "relax")
-)
-def _csr_level_step(
+def _superstep_impl(
     ceft_arr,      # (v_b + 1, P) running DP table (donated; row v_b is scratch)
     ptask,         # (v_b + 1, P) int32 predecessor task (donated)
     pproc,         # (v_b + 1, P) int32 predecessor class (donated)
     comp_pad,      # (v_b + 1, P) execution times (scratch row zero)
-    tasks,         # (W_b,)  int32 vertex ids, padded with v_b
-    edge_src,      # (E_b,)  int32 parent vertex ids, padded with v_b
-    edge_data,     # (E_b,)  data volume per edge (0 where padded)
-    edge_seg,      # (E_b,)  int32 within-level child slot, padded with W_b - 1
-    e_real,        # ()      int32 number of real edges (device scalar: no retrace)
+    tasks,         # (R, W_b) int32 vertex ids, padded with v_b
+    edge_src,      # (R, E_b) int32 parent vertex ids, padded with v_b
+    edge_data,     # (R, E_b) data volume per edge (0 where padded)
+    edge_seg,      # (R, E_b) int32 within-level child slot, padded with W_b - 1
+    e_real,        # (R,)     int32 real edges per level (device array: no retrace)
     L, bw,
     *,
-    num_segments: int,  # = W_b (static)
     relax: Callable = xla_edge_relax,
+    tag: str = "csr",
+    masked: bool = True,
 ):
-    """One level of the edge-centric CEFT sweep.
+    """One fused super-step of the edge-centric CEFT sweep: ``lax.scan`` over
+    a run of R adjacent levels sharing one (W_b, E_b) padded shape, in ONE
+    dispatch.
 
-    Work is O(E_b · P²) with E_b the power-of-two edge bucket of this level;
-    summed over levels that is O(e · P²) within a factor 2.  Called only for
-    levels >= 1 (every real task there has >= 1 parent).
+    Per level the work is O(E_b · P²); summed over a sweep's runs that is
+    O(e · P²) within the CSR_FUSE_WASTE factor (the paper's §5 bound).
+    Levels inside a run depend on each other through the carried DP table,
+    exactly as the per-level formulation did — the scan only removes the
+    Python-level dispatch per level, not the sequential dependence.  No-op
+    padding levels (``e_real == 0``, all-padding tasks) write only the
+    scratch row v_b.
+
+    ``masked`` is False when no *real* level in the run carries padded edges
+    (0 < e_real < E_b never happens): the NEG-masking then folds away.  No-op
+    levels stay safe unmasked — all their ids are the scratch row, so they
+    compute garbage into scratch and touch nothing real.
     """
-    key = (ceft_arr.shape, tasks.shape, edge_src.shape, num_segments)
+    key = (tag, masked, ceft_arr.shape, tasks.shape, edge_src.shape)
     CSR_TRACES[key] = CSR_TRACES.get(key, 0) + 1
-
-    E_b = edge_src.shape[0]
-    pv = ceft_arr[edge_src]                                        # (E,P) gather
-    minl, argl = relax(pv, edge_data, L, bw)                       # (E,P) each
-    valid = jnp.arange(E_b, dtype=jnp.int32) < e_real
-    minl = jnp.where(valid[:, None], minl, NEG)
-    # per-child max over its contiguous parent segment, first-max tie-break in
-    # edge order (== ascending parent id, matching argmax over the dense table)
-    maxk = jax.ops.segment_max(minl, edge_seg, num_segments=num_segments)
-    is_first = jnp.where(
-        valid[:, None] & (minl == maxk[edge_seg]),
-        jnp.arange(E_b, dtype=jnp.int32)[:, None],
-        jnp.int32(E_b),
-    )
-    arg_edge = jax.ops.segment_min(is_first, edge_seg, num_segments=num_segments)
-    arg_edge = jnp.minimum(arg_edge, E_b - 1)                      # (W,P)
+    W_b = tasks.shape[-1]
+    E_b = edge_src.shape[-1]
     P = L.shape[0]
-    cols = jnp.arange(P, dtype=jnp.int32)[None, :]
-    pt = edge_src[arg_edge].astype(jnp.int32)                      # (W,P)
-    pl = argl[arg_edge, cols]                                      # (W,P)
-    newv = comp_pad[tasks] + maxk
-    ceft_arr = ceft_arr.at[tasks].set(newv, mode="drop")
-    ptask = ptask.at[tasks].set(pt, mode="drop")
-    pproc = pproc.at[tasks].set(pl, mode="drop")
-    return ceft_arr, ptask, pproc
+
+    def body(carry, xs):
+        ceft_arr, ptask, pproc = carry
+        tasks, edge_src, edge_data, edge_seg, e_real = xs
+        pv = ceft_arr[edge_src]                                    # (E,P) gather
+        minl, argl = relax(pv, edge_data, L, bw)                   # (E,P) each
+        if masked:
+            valid = jnp.arange(E_b, dtype=jnp.int32) < e_real
+            minl = jnp.where(valid[:, None], minl, NEG)
+        cols = jnp.arange(P, dtype=jnp.int32)[None, :]
+        # per-child max over its contiguous parent segment, first-max tie-break
+        # in edge order (== ascending parent id, matching the dense argmax)
+        if W_b == 1:
+            # single segment (deep narrow runs: chains, GE tails) -- the
+            # segmented reduction collapses to a plain max/argmax, whose
+            # first-max tie-break equals first-max-in-edge-order
+            maxk = jnp.max(minl, axis=0, keepdims=True)            # (1,P)
+            arg_edge = jnp.argmax(minl, axis=0)[None, :]           # (1,P)
+        else:
+            maxk = jax.ops.segment_max(minl, edge_seg, num_segments=W_b)
+            hit = minl == maxk[edge_seg]
+            if masked:
+                hit &= valid[:, None]
+            is_first = jnp.where(
+                hit,
+                jnp.arange(E_b, dtype=jnp.int32)[:, None],
+                jnp.int32(E_b),
+            )
+            arg_edge = jax.ops.segment_min(is_first, edge_seg, num_segments=W_b)
+            arg_edge = jnp.minimum(arg_edge, E_b - 1)              # (W,P)
+        pt = edge_src[arg_edge].astype(jnp.int32)                  # (W,P)
+        pl = argl[arg_edge, cols]                                  # (W,P)
+        newv = comp_pad[tasks] + maxk
+        ceft_arr = ceft_arr.at[tasks].set(newv, mode="drop")
+        ptask = ptask.at[tasks].set(pt, mode="drop")
+        pproc = pproc.at[tasks].set(pl, mode="drop")
+        return (ceft_arr, ptask, pproc), None
+
+    carry, _ = jax.lax.scan(
+        body, (ceft_arr, ptask, pproc),
+        (tasks, edge_src, edge_data, edge_seg, e_real),
+    )
+    return carry
+
+
+def _superstep_init_impl(
+    comp_pad, srcs_pad, tasks, edge_src, edge_data, edge_seg, e_real, L, bw,
+    *, relax: Callable = xla_edge_relax, tag: str = "csr", masked: bool = True,
+):
+    """First super-step of a sweep with the level-0 init folded in: a whole
+    deep-chain sweep is then ONE dispatch, matching the dense scan's."""
+    carry = _init_impl(comp_pad, srcs_pad, tag=tag + "+init")
+    return _superstep_impl(
+        *carry, comp_pad, tasks, edge_src, edge_data, edge_seg, e_real, L, bw,
+        relax=relax, tag=tag, masked=masked,
+    )
+
+
+def _dense_superstep_impl(
+    ceft_arr, ptask, pproc, comp_pad,
+    tasks,   # (R, W_b) int32 vertex ids, -1 padded
+    par,     # (R, W_b, D_b) int32 parent ids, -1 padded
+    pdata,   # (R, W_b, D_b) data volume per parent edge
+    L, bw,
+    *, relax: Callable = xla_relax, tag: str = "csr_dense",
+):
+    """Dense-layout super-step: the run's levels scanned through the same
+    per-level body as the whole-graph padded sweep, but over *run-local*
+    (W_b, D_b) buckets.  The hybrid sweep picks this for runs without
+    within-level in-degree skew (W·D ≈ E), where the dense contraction beats
+    the segmented reduction; the work bound is preserved because the buckets
+    are the run's own, not the graph-global (Wmax, Dmax)."""
+    key = (tag, ceft_arr.shape, tasks.shape, par.shape)
+    CSR_TRACES[key] = CSR_TRACES.get(key, 0) + 1
+    v = comp_pad.shape[0] - 1
+    body = _dense_level_body(v, comp_pad, L, bw, relax)
+    carry, _ = jax.lax.scan(body, (ceft_arr, ptask, pproc), (tasks, par, pdata))
+    return carry
+
+
+def _dense_superstep_init_impl(
+    comp_pad, srcs_pad, tasks, par, pdata, L, bw,
+    *, relax: Callable = xla_relax, tag: str = "csr_dense",
+):
+    carry = _init_impl(comp_pad, srcs_pad, tag=tag + "+init")
+    return _dense_superstep_impl(
+        *carry, comp_pad, tasks, par, pdata, L, bw, relax=relax, tag=tag
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _superstep_fns(relax: Callable):
+    """Module-level cached jitted super-steps for one edge relax_fn, keyed
+    (batched, layout, masked, with_init) with layout in {"seg", "dense"}.
+    Dense-layout runs always use the XLA dense relax (a custom ``relax``
+    plugs into the segment layout only).  Carry buffers are donated off-CPU —
+    the DP table then updates in place; on CPU donation is unsupported and
+    each donated call pays a fallback copy, so it is disabled there."""
+    donate = () if jax.default_backend() == "cpu" else (0, 1, 2)
+    fns = {}
+    for batched in (False, True):
+        tag = "csr_batch" if batched else "csr"
+        for masked in (False, True):
+            cont = functools.partial(
+                _superstep_impl, relax=relax, masked=masked, tag=tag
+            )
+            init = functools.partial(
+                _superstep_init_impl, relax=relax, masked=masked, tag=tag
+            )
+            if batched:
+                cont = jax.vmap(
+                    cont,
+                    in_axes=(0, 0, 0, 0, None, None, None, None, None, 0, 0),
+                )
+                init = jax.vmap(
+                    init, in_axes=(0, None, None, None, None, None, None, 0, 0)
+                )
+            fns[(batched, "seg", masked, False)] = jax.jit(
+                cont, donate_argnums=donate
+            )
+            fns[(batched, "seg", masked, True)] = jax.jit(init)
+        dtag = tag + "_dense" if batched else "csr_dense"
+        dcont = functools.partial(_dense_superstep_impl, tag=dtag)
+        dinit = functools.partial(_dense_superstep_init_impl, tag=dtag)
+        if batched:
+            dcont = jax.vmap(
+                dcont, in_axes=(0, 0, 0, 0, None, None, None, 0, 0)
+            )
+            dinit = jax.vmap(dinit, in_axes=(0, None, None, None, None, 0, 0))
+        fns[(batched, "dense", False, False)] = jax.jit(
+            dcont, donate_argnums=donate
+        )
+        fns[(batched, "dense", False, True)] = jax.jit(dinit)
+    return fns
+
+
+def _init_impl(comp_pad, srcs_pad, *, tag: str = "init"):
+    """Jitted sweep prologue — level 0: CEFT(src, j) = comp(src, j), no
+    predecessors.  ``srcs_pad`` is the source-id list padded with the scratch
+    row v_b (whose comp row is zero, so padded writes are no-ops).  Keeping
+    the init on device, bucketed, makes a whole deep-chain sweep two
+    dispatches (init + one scanned super-step) instead of host-built
+    transfers per call."""
+    key = (tag, comp_pad.shape, srcs_pad.shape)
+    CSR_TRACES[key] = CSR_TRACES.get(key, 0) + 1
+    v1, P = comp_pad.shape
+    ceft0 = jnp.zeros((v1, P), comp_pad.dtype).at[srcs_pad].set(
+        comp_pad[srcs_pad]
+    )
+    return (
+        ceft0,
+        jnp.full((v1, P), -1, jnp.int32),
+        jnp.full((v1, P), -1, jnp.int32),
+    )
+
+
+_csr_init = jax.jit(_init_impl)
+_csr_init_batch = jax.jit(
+    jax.vmap(
+        functools.partial(_init_impl, tag="init_batch"), in_axes=(0, None)
+    )
+)
+
+
+def _fused_runs(g: TaskGraph, segs=None):
+    """Host-side bucketed super-step tables — the bucket policy lives here,
+    not in taskgraph.
+
+    Greedy fusion: extend each run of adjacent levels while the padded work
+    at the run-max buckets stays within CSR_FUSE_WASTE of the real work.
+    Per-run *layout* choice: runs whose width·fan-in bucket is within
+    CSR_DENSE_SKEW of the edge bucket (no within-level in-degree skew:
+    chains, GE, layered DAGs) take the dense (R, W, D) layout built from
+    run-local buckets (``fuse_levels_dense``); skewed runs (star fan-in,
+    heavy tails) keep the segment layout (``fuse_levels``).  All shape axes
+    use the √2 ``_geo_bucket`` grid and run lengths are padded with no-op
+    levels, so neither depth nor exact widths leak into the jit key.
+    Returns (runs, v_b) with runs a level-ordered list of FusedLevelRun /
+    FusedDenseRun."""
+    if segs is None:
+        segs = csr_level_segments(g)
+    v_b = _geo_bucket(g.n)
+    tb, eb = segs.task_bounds, segs.edge_bounds
+    ws = [int(tb[k + 1] - tb[k]) for k in range(1, segs.n_levels)]
+    es = [int(eb[k + 1] - eb[k]) for k in range(1, segs.n_levels)]
+    groups: list[tuple[int, int, int, int]] = []  # (lo, hi, W_b, E_b), levels [lo, hi)
+    start = 0
+    cur_w = cur_e = real = 0
+    for k in range(len(ws)):
+        if k == start:
+            cur_w, cur_e = _geo_bucket(ws[k]), _geo_bucket(es[k])
+            real = ws[k] + es[k]
+            continue
+        new_w = max(cur_w, _geo_bucket(ws[k]))
+        new_e = max(cur_e, _geo_bucket(es[k]))
+        r = k - start + 1
+        if r * (new_w + new_e) <= CSR_FUSE_WASTE * (real + ws[k] + es[k]):
+            cur_w, cur_e = new_w, new_e
+            real += ws[k] + es[k]
+        else:  # close the run: waste budget exceeded
+            groups.append((start + 1, k + 1, cur_w, cur_e))
+            start = k
+            cur_w, cur_e = _geo_bucket(ws[k]), _geo_bucket(es[k])
+            real = ws[k] + es[k]
+    if len(ws) > start:
+        groups.append((start + 1, len(ws) + 1, cur_w, cur_e))
+
+    indeg = g.in_degree
+    widths = [0] * len(ws)
+    ecaps = [0] * len(ws)
+    run_ids = [-1] * len(ws)
+    layouts = []
+    for i, (lo, hi, W_b, E_b) in enumerate(groups):
+        run_tasks = segs.task_ids[tb[lo] : tb[hi]]
+        D_b = _geo_bucket(int(indeg[run_tasks].max()))
+        if W_b * D_b <= CSR_DENSE_SKEW * E_b:
+            layouts.append(("dense", lo, hi, W_b, D_b))
+        else:
+            layouts.append(("seg", lo, hi))
+            for k in range(lo - 1, hi - 1):
+                widths[k], ecaps[k], run_ids[k] = W_b, E_b, i
+    seg_runs = iter(
+        fuse_levels(segs, widths, ecaps, pad_vertex=v_b,
+                    pad_run=_geo_bucket, run_ids=run_ids)
+    )
+    runs = []
+    for lay in layouts:
+        if lay[0] == "dense":
+            _, lo, hi, W_b, D_b = lay
+            runs.append(fuse_levels_dense(
+                segs, lo, hi, W_b, D_b, pad_run=_geo_bucket))
+        else:
+            runs.append(next(seg_runs))
+    return runs, v_b
+
+
+def _device_runs(runs):
+    """Move fused super-step tables to device (the scanned xs arrays), each
+    tagged with its layout.  Segment runs carry the host-known ``masked``
+    flag: False when no real level has padded edges (no-op run-padding
+    levels are safe unmasked — they only touch the scratch row)."""
+    out = []
+    for r in runs:
+        if hasattr(r, "par"):  # FusedDenseRun
+            out.append(
+                ("dense", jnp.asarray(r.tasks), jnp.asarray(r.par),
+                 jnp.asarray(r.pdata))
+            )
+        else:
+            E_b = r.edge_src.shape[-1]
+            masked = bool(np.any((r.e_real > 0) & (r.e_real < E_b)))
+            out.append(
+                ("seg", jnp.asarray(r.tasks), jnp.asarray(r.edge_src),
+                 jnp.asarray(r.edge_data), jnp.asarray(r.edge_seg),
+                 jnp.asarray(r.e_real), masked)
+            )
+    return out
+
+
+def _padded_sources(g: TaskGraph, v_b: int) -> np.ndarray:
+    """Source ids padded with the scratch row v_b to a bucketed length (so
+    the jitted init does not retrace per source count)."""
+    srcs = g.sources
+    s_b = _geo_bucket(len(srcs))
+    out = np.full(s_b, v_b, np.int32)
+    out[: len(srcs)] = srcs
+    return out
+
+
+# one-slot cache for the graph-derived device state: TaskGraph is frozen /
+# immutable and the re-planning loops (straggler, benchmarks) sweep the same
+# graph object repeatedly -- a miss only costs the rebuild (a content-equal
+# rebuilt graph produces identical tables, so identity keying cannot go
+# stale).  The whole entry lives under ONE key as an immutable tuple: reads
+# capture it with a single reference load, so a concurrent sweep of another
+# graph can replace the slot but never hand a caller torn state.
+_GRAPH_STATE: dict = {}
+
+
+def _graph_device_state(g: TaskGraph, segs=None):
+    """(device runs, padded sources, v_b) for one graph, identity-cached."""
+    entry = _GRAPH_STATE.get("entry")
+    if entry is not None and entry[0] is g:
+        return entry[1], entry[2], entry[3]
+    fused, v_b = _fused_runs(g, segs=segs)
+    runs = _device_runs(fused)
+    srcs = jnp.asarray(_padded_sources(g, v_b))
+    _GRAPH_STATE["entry"] = (g, runs, srcs, v_b)
+    return runs, srcs, v_b
 
 
 def csr_device_inputs(g: TaskGraph, comp: np.ndarray, m: Machine, dtype=jnp.float32):
-    """Bucketed per-level device arrays for :func:`ceft_jax_csr`.
+    """Bucketed fused super-step device arrays for :func:`ceft_jax_csr`.
 
-    Returns (levels, comp_pad, L, bw, v_b) where ``levels`` is a list of
-    per-level tuples (tasks, edge_src, edge_data, edge_seg, e_real, W_b) with
-    every array padded to power-of-two buckets, and comp_pad is the (v_b+1, P)
+    Returns (runs, comp_pad, srcs_pad, L, bw, v_b) where ``runs`` is a list
+    of stacked per-run tuples (tasks, edge_src, edge_data, edge_seg, e_real)
+    — one scanned dispatch each — and comp_pad is the (v_b+1, P)
     execution-time table (vertex count bucketed too, so graph size does not
     leak into the jit key).
     """
-    segs = csr_level_segments(g)
+    runs, srcs_pad, v_b = _graph_device_state(g)
     v, P = comp.shape
-    v_b = _bucket(v)
     comp_pad = np.zeros((v_b + 1, P), np.float32)
     comp_pad[:v] = comp
-    levels = []
-    for k in range(1, segs.n_levels):
-        t = segs.level_tasks(k)
-        esrc, edat, eseg = segs.level_edges(k)
-        W_b = _bucket(len(t))
-        E_b = _bucket(len(esrc), minimum=8)
-        tasks = np.full(W_b, v_b, np.int32)
-        tasks[: len(t)] = t
-        src = np.full(E_b, v_b, np.int32)
-        src[: len(esrc)] = esrc
-        dat = np.zeros(E_b, np.float32)
-        dat[: len(esrc)] = edat
-        seg = np.full(E_b, W_b - 1, np.int32)
-        seg[: len(esrc)] = eseg
-        levels.append(
-            (
-                jnp.asarray(tasks),
-                jnp.asarray(src),
-                jnp.asarray(dat),
-                jnp.asarray(seg),
-                jnp.asarray(len(esrc), jnp.int32),
-                W_b,
-            )
-        )
     return (
-        levels,
+        runs,
         jnp.asarray(comp_pad, dtype),
+        srcs_pad,
         jnp.asarray(m.L, dtype),
         jnp.asarray(m.bw, dtype),
         v_b,
     )
 
 
-def csr_sweep(g: TaskGraph, comp: np.ndarray, inputs, *, relax: Callable = xla_edge_relax):
-    """Run the bucketed CSR sweep over prebuilt :func:`csr_device_inputs`.
+def csr_sweep(inputs, *, relax: Callable = xla_edge_relax):
+    """Run the fused CSR sweep over prebuilt :func:`csr_device_inputs`
+    (which carries everything the sweep needs -- no graph/cost re-reads, so
+    stale-argument mismatches are impossible by construction).
 
-    Re-buildable per call because the per-level step donates its carry buffers
-    (the DP table is updated in place on device).  Returns the (v, P) device
-    arrays (ceft, pred_task, pred_proc)."""
-    levels, comp_pad, L, bw, v_b = inputs
-    v, P = comp.shape
-    # level 0 = sources: CEFT(src, j) = comp(src, j), no predecessors
-    ceft0 = np.zeros((v_b + 1, P), np.float32)
-    srcs = g.sources
-    ceft0[srcs] = comp[srcs]
-    ceft_arr = jnp.asarray(ceft0)
-    ptask = jnp.full((v_b + 1, P), -1, jnp.int32)
-    pproc = jnp.full((v_b + 1, P), -1, jnp.int32)
-    for tasks, esrc, edat, eseg, e_real, W_b in levels:
-        ceft_arr, ptask, pproc = _csr_level_step(
-            ceft_arr, ptask, pproc, comp_pad, tasks, esrc, edat, eseg,
-            e_real, L, bw, num_segments=W_b, relax=relax,
-        )
-    return ceft_arr[:v], ptask[:v], pproc[:v]
+    One jitted dispatch for the init plus one per fused run (a 64-level chain
+    is TWO dispatches, not 64+).  Re-runnable per call because the super-step
+    donates its carry buffers (the DP table is updated in place on device).
+    Returns the *padded* (v_b+1, P) device arrays (ceft, pred_task,
+    pred_proc); rows >= g.n are scratch — slice after the host transfer
+    (slicing on device would add a per-call dispatch per output)."""
+    runs, comp_pad, srcs_pad, L, bw, v_b = inputs
+    fns = _superstep_fns(relax)
+    carry = None
+    for layout, *arrs in runs:
+        masked = arrs.pop() if layout == "seg" else False
+        if carry is None:  # level-0 init folded into the first dispatch
+            carry = fns[(False, layout, masked, True)](
+                comp_pad, srcs_pad, *arrs, L, bw
+            )
+        else:
+            carry = fns[(False, layout, masked, False)](
+                *carry, comp_pad, *arrs, L, bw
+            )
+    if carry is None:  # single-level graph: no relaxation levels at all
+        carry = _csr_init(comp_pad, srcs_pad)
+    return carry
 
 
 def ceft_jax_csr(
     g: TaskGraph, comp: np.ndarray, m: Machine, *, relax: Callable = xla_edge_relax
 ) -> CeftResult:
-    """Edge-centric CSR CEFT sweep: O(e·P²) work, bucketed jit shapes.
+    """Edge-centric CSR CEFT sweep: O(e·P²) work, bucketed jit shapes, fused
+    same-bucket super-steps.
 
     Produces values bit-identical to :func:`ceft_jax` (same float32 arithmetic
     per candidate, same tie-breaking) while doing only real-edge work.
     """
+    v = g.n
     inputs = csr_device_inputs(g, comp, m)
-    ceft_arr, ptask, pproc = csr_sweep(g, comp, inputs, relax=relax)
+    ceft_arr, ptask, pproc = csr_sweep(inputs, relax=relax)
     return _finalize(
         g,
-        np.asarray(ceft_arr, np.float64),
-        np.asarray(ptask),
-        np.asarray(pproc),
+        np.asarray(ceft_arr, np.float64)[:v],
+        np.asarray(ptask)[:v],
+        np.asarray(pproc)[:v],
     )
+
+
+# ------------------------------------------------------- batched CSR re-planning
+def csr_batch_device_inputs(g: TaskGraph, comps, Ls, bws, dtype=jnp.float32):
+    """Device arrays for :func:`csr_batch_sweep`: the fused segment tables are
+    shared (batch-invariant); cost planes / machines are stacked per scenario.
+
+    Returns (runs, comp_pad (B, v_b+1, P), srcs_pad, Ls (B, P),
+    bws (B, P, P), v_b)."""
+    entry = _GRAPH_STATE.get("entry")
+    if entry is not None and entry[0] is g:
+        # hot re-planning path (same graph object): skip rebuilding the
+        # shared segments entirely, only the cost planes change
+        comps = stack_cost_planes(g, comps)
+        runs, srcs_pad, v_b = entry[1], entry[2], entry[3]
+    else:
+        segs, comps = csr_batch_segments(g, comps)
+        runs, srcs_pad, v_b = _graph_device_state(g, segs=segs)
+    B, v, P = comps.shape
+    comp_pad = np.zeros((B, v_b + 1, P), np.float32)
+    comp_pad[:, :v] = comps
+    return (
+        runs,
+        jnp.asarray(comp_pad, dtype),
+        srcs_pad,
+        jnp.asarray(np.asarray(Ls, np.float32), dtype),
+        jnp.asarray(np.asarray(bws, np.float32), dtype),
+        v_b,
+    )
+
+
+def csr_batch_sweep(inputs, *, relax: Callable = xla_edge_relax):
+    """Run the batched fused CSR sweep over prebuilt
+    :func:`csr_batch_device_inputs` (self-contained, like :func:`csr_sweep`): a module-level jitted vmap over the
+    scenario axis with the segment tables passed unbatched (in_axes=None).
+    Returns the *padded* (B, v_b+1, P) device arrays (ceft, pred_task,
+    pred_proc); rows >= g.n are scratch (see :func:`csr_sweep`)."""
+    runs, comp_pad, srcs_pad, Ls, bws, v_b = inputs
+    fns = _superstep_fns(relax)
+    carry = None
+    for layout, *arrs in runs:
+        masked = arrs.pop() if layout == "seg" else False
+        if carry is None:  # level-0 init folded into the first dispatch
+            carry = fns[(True, layout, masked, True)](
+                comp_pad, srcs_pad, *arrs, Ls, bws
+            )
+        else:
+            carry = fns[(True, layout, masked, False)](
+                *carry, comp_pad, *arrs, Ls, bws
+            )
+    if carry is None:  # single-level graph: no relaxation levels at all
+        carry = _csr_init_batch(comp_pad, srcs_pad)
+    return carry
+
+
+def ceft_jax_batch_csr(
+    g: TaskGraph, comps: np.ndarray, Ls: np.ndarray, bws: np.ndarray,
+    *, relax: Callable = xla_edge_relax,
+):
+    """Batched re-planning on the CSR formulation: vmap over machines that
+    share P, segment tables shared across the batch (ISSUE 4 — the straggler
+    loop's O(e·P²) bound).
+
+    comps: (B, v, P); Ls: (B, P); bws: (B, P, P).  Returns the (B, v, P)
+    arrays (host-sliced from the padded carries), bit-identical to
+    :func:`ceft_jax_batch`.
+    """
+    v = g.n
+    inputs = csr_batch_device_inputs(g, comps, Ls, bws)
+    ceft_arr, ptask, pproc = csr_batch_sweep(inputs, relax=relax)
+    return (
+        np.asarray(ceft_arr)[:, :v],
+        np.asarray(ptask)[:, :v],
+        np.asarray(pproc)[:, :v],
+    )
+
+
+def ceft_batch_csr_results(
+    g: TaskGraph, comps: np.ndarray, Ls: np.ndarray, bws: np.ndarray,
+    *, relax: Callable = xla_edge_relax,
+) -> list[CeftResult]:
+    """Finalized :class:`CeftResult` per batched scenario (paper lines 19-26
+    applied to each plane) — the form the re-planning schedulers consume."""
+    ceft_arr, ptask, pproc = ceft_jax_batch_csr(g, comps, Ls, bws, relax=relax)
+    ceft_np = np.asarray(ceft_arr, np.float64)
+    pt_np, pp_np = np.asarray(ptask), np.asarray(pproc)
+    return [
+        _finalize(g, ceft_np[b], pt_np[b], pp_np[b]) for b in range(ceft_np.shape[0])
+    ]

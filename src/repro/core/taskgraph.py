@@ -313,6 +313,199 @@ class LevelSegments:
         return self.edge_src[s], self.edge_data[s], self.edge_seg[s]
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedLevelRun:
+    """Stacked super-step tables: a run of adjacent levels sharing one padded
+    shape, stacked along a leading axis so a device sweep can ``lax.scan`` the
+    whole run in a single dispatch (ISSUE 4) instead of one Python-level call
+    per level.
+
+      tasks     : (R, W) vertex ids, padded with the caller's pad vertex
+      edge_src  : (R, E) parent vertex id per edge, padded with the pad vertex
+      edge_data : (R, E) data volume per edge (0 where padded)
+      edge_seg  : (R, E) within-level child slot, padded with W - 1
+      e_real    : (R,)   real (unpadded) edge count per level
+      width     : W — the per-level segment count (padding slots included)
+
+    Rows past the run's natural length are no-op levels (all-padding tasks and
+    edges, ``e_real == 0``): a sweep may execute them freely, they only touch
+    the padding scratch slot.
+    """
+    tasks: np.ndarray
+    edge_src: np.ndarray
+    edge_data: np.ndarray
+    edge_seg: np.ndarray
+    e_real: np.ndarray
+    width: int
+
+    @property
+    def n_levels(self) -> int:
+        return int(self.tasks.shape[0])
+
+
+def fuse_levels(
+    segs: LevelSegments,
+    widths: Sequence[int],
+    edge_caps: Sequence[int],
+    *,
+    pad_vertex: int,
+    pad_run: "Callable[[int], int] | None" = None,
+    run_ids: "Sequence[int] | None" = None,
+) -> list[FusedLevelRun]:
+    """Group adjacent levels landing in the same padded shape into stacked
+    super-step tables.
+
+    ``widths[k-1]`` / ``edge_caps[k-1]`` give level ``k``'s padded task/edge
+    capacity for ``k in [1, n_levels)`` — the *caller* chooses them (the pow2
+    bucket policy is owned by core/ceft_jax.py; this pass only groups equal
+    shapes).  Level 0 (sources, no parent edges) is never part of a run.
+    ``pad_run`` optionally maps a run's natural length to its padded length;
+    appended levels are no-ops (see :class:`FusedLevelRun`).
+
+    ``run_ids`` (aligned with ``widths``) makes the grouping explicit instead
+    of by-equal-shape: adjacent levels group iff they share a non-negative
+    run id, and levels with a negative id are skipped entirely (the caller
+    builds those through another layout, e.g. :func:`fuse_levels_dense`).
+    """
+    n_levels = segs.n_levels
+    if n_levels > 1 and (len(widths) != n_levels - 1 or len(edge_caps) != n_levels - 1):
+        raise ValueError("need one (width, edge_cap) per level in [1, n_levels)")
+    if run_ids is not None and len(run_ids) != n_levels - 1:
+        raise ValueError("need one run id per level in [1, n_levels)")
+
+    def same_group(a: int, b: int) -> bool:
+        if run_ids is not None:
+            return run_ids[a - 1] == run_ids[b - 1]
+        return (int(widths[a - 1]), int(edge_caps[a - 1])) == (
+            int(widths[b - 1]), int(edge_caps[b - 1]))
+
+    runs: list[FusedLevelRun] = []
+    k = 1
+    while k < n_levels:
+        if run_ids is not None and run_ids[k - 1] < 0:
+            k += 1
+            continue
+        j = k
+        key = (int(widths[k - 1]), int(edge_caps[k - 1]))
+        while j + 1 < n_levels and same_group(k, j + 1):
+            j += 1
+            if (int(widths[j - 1]), int(edge_caps[j - 1])) != key:
+                raise ValueError("a run must share one (width, edge_cap)")
+        W, E = key
+        R = j - k + 1
+        R_pad = int(pad_run(R)) if pad_run is not None else R
+        tasks = np.full((R_pad, W), pad_vertex, np.int32)
+        src = np.full((R_pad, E), pad_vertex, np.int32)
+        dat = np.zeros((R_pad, E), np.float32)
+        seg = np.full((R_pad, E), W - 1, np.int32)
+        e_real = np.zeros(R_pad, np.int32)
+        for r, lv in enumerate(range(k, j + 1)):
+            t = segs.level_tasks(lv)
+            es, ed, eg = segs.level_edges(lv)
+            if len(t) > W or len(es) > E:
+                raise ValueError(f"level {lv} exceeds its padded shape {key}")
+            tasks[r, : len(t)] = t
+            src[r, : len(es)] = es
+            dat[r, : len(es)] = ed
+            seg[r, : len(es)] = eg
+            e_real[r] = len(es)
+        runs.append(FusedLevelRun(tasks, src, dat, seg, e_real, W))
+        k = j + 1
+    return runs
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedDenseRun:
+    """Dense-layout super-step tables: a run of adjacent levels stacked into
+    run-local (R, W, D) padded parent tables (the `padded_level_tables` form
+    restricted to one run and its own width/fan-in buckets).
+
+    The device sweep picks this layout for runs with no *within-level*
+    in-degree skew (W·D ≈ E): the dense contraction then does the same work
+    as the segment form with cheaper per-level reductions.  Padding follows
+    `padded_level_tables`: vertex/parent ids -1, data 0; rows past the run's
+    natural length are all-padding no-op levels.
+    """
+    tasks: np.ndarray   # (R, W) vertex ids, -1 padded
+    par: np.ndarray     # (R, W, D) parent vertex ids, -1 padded
+    pdata: np.ndarray   # (R, W, D) data volume per parent edge (0 padded)
+
+    @property
+    def n_levels(self) -> int:
+        return int(self.tasks.shape[0])
+
+
+def fuse_levels_dense(
+    segs: LevelSegments,
+    start: int,
+    stop: int,
+    width: int,
+    depth: int,
+    *,
+    pad_run: "Callable[[int], int] | None" = None,
+) -> FusedDenseRun:
+    """Build one run's dense (R, width, depth) tables for levels [start, stop)
+    directly from the CSR segments — O(run edges) host work at the caller's
+    *run-local* buckets.  (Slicing graph-global `padded_level_tables` would
+    cost O(n_levels·Wmax·Dmax) to extract a narrow run, reintroducing the
+    padding blowup the fused sweep exists to avoid; a run of narrow levels
+    must not pay for the widest level elsewhere in the graph.)
+
+    Parent slots follow the `padded_level_tables` convention — per child, the
+    k-th slot is its k-th parent in ascending-id order — so the dense scan
+    body tie-breaks identically."""
+    R = stop - start
+    R_pad = int(pad_run(R)) if pad_run is not None else R
+    tasks = np.full((R_pad, width), -1, np.int32)
+    par = np.full((R_pad, width, depth), -1, np.int32)
+    pdat = np.zeros((R_pad, width, depth), np.float32)
+    for r, lv in enumerate(range(start, stop)):
+        t = segs.level_tasks(lv)
+        es, ed, eg = segs.level_edges(lv)
+        if len(t) > width:
+            raise ValueError(f"level {lv} width {len(t)} exceeds {width}")
+        tasks[r, : len(t)] = t
+        if len(es) == 0:
+            continue
+        # within-segment position: edges are sorted by (slot, parent id)
+        starts = np.zeros(len(es), np.int64)
+        first = np.flatnonzero(np.diff(eg)) + 1
+        starts[first] = first
+        np.maximum.accumulate(starts, out=starts)
+        k = np.arange(len(es)) - starts
+        if int(k.max()) >= depth:
+            raise ValueError(f"level {lv} fan-in {int(k.max()) + 1} exceeds {depth}")
+        par[r, eg, k] = es
+        pdat[r, eg, k] = ed
+    return FusedDenseRun(tasks, par, pdat)
+
+
+def stack_cost_planes(
+    g: TaskGraph, comps: "Sequence[np.ndarray] | np.ndarray"
+) -> np.ndarray:
+    """Validate and stack per-scenario ``(v, P)`` cost planes into the
+    float32 ``(B, v, P)`` array the batched device sweep runs on."""
+    if not isinstance(comps, np.ndarray):
+        comps = np.stack([np.asarray(c) for c in comps])
+    comps = np.asarray(comps, np.float32)
+    if comps.ndim != 3 or comps.shape[1] != g.n:
+        raise ValueError(f"comps must be (B, {g.n}, P); got {comps.shape}")
+    return comps
+
+
+def csr_batch_segments(
+    g: TaskGraph, comps: "Sequence[np.ndarray] | np.ndarray"
+) -> tuple[LevelSegments, np.ndarray]:
+    """Shared segment arrays + stacked per-scenario cost planes for the
+    batched (vmapped) CSR sweep.
+
+    The level/segment structure depends only on the graph, so one
+    :class:`LevelSegments` is shared across the whole batch; the per-scenario
+    cost planes are stacked via :func:`stack_cost_planes`.
+    """
+    return csr_level_segments(g), stack_cost_planes(g, comps)
+
+
 def csr_level_segments(g: TaskGraph) -> LevelSegments:
     """Flatten each level's parent edges into contiguous segments.
 

@@ -5,13 +5,26 @@ ceft_relax : fused CEFT level relaxation (min over parent classes -> masked max
              over parents) with argmin/argmax path bookkeeping
 edge_relax : segment-tiled edge-centric relaxation for the CSR CEFT sweep
              (per-edge min over parent classes; O(e·P²) work, VMEM-resident)
+edge_relax_superstep : the stacked super-step tile variant — a fused run's
+             (R, E, P) edge tables relaxed in one pallas_call (run/batch axis
+             as an outer grid dimension).  Validated standalone against its
+             oracle; the sequential CSR sweep relaxes level-by-level inside
+             lax.scan, so this is the building block for the whole-run TPU
+             kernel path (ROADMAP), not yet wired into the sweep
 ref        : pure-jnp oracles; every kernel is validated against these in
              interpret mode across shape/dtype sweeps (tests/test_kernels.py)
 """
-from .ops import ceft_relax, edge_relax, minplus, pallas_edge_relax, pallas_relax
+from .ops import (
+    ceft_relax,
+    edge_relax,
+    edge_relax_superstep,
+    minplus,
+    pallas_edge_relax,
+    pallas_relax,
+)
 from . import ref
 
 __all__ = [
-    "ceft_relax", "edge_relax", "minplus", "pallas_edge_relax",
-    "pallas_relax", "ref",
+    "ceft_relax", "edge_relax", "edge_relax_superstep", "minplus",
+    "pallas_edge_relax", "pallas_relax", "ref",
 ]

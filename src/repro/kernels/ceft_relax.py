@@ -82,6 +82,58 @@ def _edge_relax_kernel(pv_ref, pdata_ref, L_ref, bw_ref, min_ref, argl_ref):
     argl_ref[...] = jnp.argmin(cand, axis=1).astype(jnp.int32)
 
 
+def _edge_relax_superstep_kernel(pv_ref, pdata_ref, L_ref, bw_ref, min_ref, argl_ref):
+    """Stacked super-step tile (ISSUE 4): one grid step relaxes one
+    (level, edge-block) tile of a fused run's stacked (R, E, P) edge tables —
+    the same VMEM-resident (block_e, P, P) candidate tile as
+    ``_edge_relax_kernel``, with the run (or batch) axis as an outer grid
+    dimension so a whole super-step's relaxation is one ``pallas_call``."""
+    pv = pv_ref[...][0]       # (block_e, P)
+    pdata = pdata_ref[...][0]  # (block_e,)
+    L = L_ref[...]            # (P,)
+    bw = bw_ref[...]          # (P, P)
+    P = pv.shape[1]
+    off = 1.0 - jnp.eye(P, dtype=pv.dtype)
+    comm = (L[None, :, None] + pdata[:, None, None] / bw[None]) * off  # (E,Pl,Pj)
+    cand = pv[:, :, None] + comm                                       # (E,Pl,Pj)
+    min_ref[...] = jnp.min(cand, axis=1)[None]
+    argl_ref[...] = jnp.argmin(cand, axis=1).astype(jnp.int32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def edge_relax_superstep_pallas(
+    pv: jnp.ndarray,      # (R, E, P) stacked gathered parent CEFT values, float32
+    pdata: jnp.ndarray,   # (R, E)    data volume per edge, float32
+    L: jnp.ndarray,       # (P,)      float32
+    bw: jnp.ndarray,      # (P, P)    float32
+    *,
+    block_e: int = 128,
+    interpret: bool = False,
+):
+    R, E, P = pv.shape
+    assert E % block_e == 0, "pad via ops.edge_relax_superstep"
+    grid = (R, E // block_e)
+    return pl.pallas_call(
+        _edge_relax_superstep_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_e, P), lambda r, i: (r, i, 0)),
+            pl.BlockSpec((1, block_e), lambda r, i: (r, i)),
+            pl.BlockSpec((P,), lambda r, i: (0,)),
+            pl.BlockSpec((P, P), lambda r, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_e, P), lambda r, i: (r, i, 0)),
+            pl.BlockSpec((1, block_e, P), lambda r, i: (r, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, E, P), pv.dtype),
+            jax.ShapeDtypeStruct((R, E, P), jnp.int32),
+        ],
+        interpret=interpret,
+    )(pv, pdata, L, bw)
+
+
 @functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
 def edge_relax_pallas(
     pv: jnp.ndarray,      # (E, P) gathered parent CEFT values, float32

@@ -9,7 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .ceft_relax import ceft_relax_pallas, edge_relax_pallas
+from .ceft_relax import (
+    ceft_relax_pallas,
+    edge_relax_pallas,
+    edge_relax_superstep_pallas,
+)
 from .minplus import BIG, minplus_pallas
 from . import ref
 
@@ -87,6 +91,28 @@ def edge_relax(pv, pdata, L, bw, *, block_e: int = 128, interpret: bool | None =
         bw = _pad_to(_pad_to(bw, 0, 128, 1.0), 1, 128, 1.0)
     minl, argl = edge_relax_pallas(pv, pdata, L, bw, block_e=block_e, interpret=interpret)
     return minl[:E, :P], argl[:E, :P]
+
+
+def edge_relax_superstep(pv, pdata, L, bw, *, block_e: int = 128,
+                         interpret: bool | None = None):
+    """Stacked super-step edge relaxation (see ceft_relax.py): the fused-run
+    (R, E, P) form with the run/batch axis as an outer grid dimension.  Pads
+    the edge axis to a block multiple (padded rows are sliced off; the CSR
+    sweep masks them anyway) and, on TPU, the class axis to the 128-lane
+    tile (padded classes get +BIG values so they are never selected)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    R, E, P = pv.shape
+    pv = _pad_to(pv, 1, block_e, 0.0)
+    pdata = _pad_to(pdata, 1, block_e, 0.0)
+    if _on_tpu():
+        pv = _pad_to(pv, 2, 128, BIG)
+        L = _pad_to(L, 0, 128, BIG)
+        bw = _pad_to(_pad_to(bw, 0, 128, 1.0), 1, 128, 1.0)
+    minl, argl = edge_relax_superstep_pallas(
+        pv, pdata, L, bw, block_e=block_e, interpret=interpret
+    )
+    return minl[:, :E, :P], argl[:, :E, :P]
 
 
 def pallas_edge_relax(pv, pdata, L, bw):

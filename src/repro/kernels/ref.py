@@ -28,6 +28,20 @@ def edge_relax_ref(pv, pdata, L, bw):
     return jnp.min(cand, axis=1), jnp.argmin(cand, axis=1).astype(jnp.int32)
 
 
+def edge_relax_superstep_ref(pv, pdata, L, bw):
+    """Stacked super-step relaxation oracle: ``edge_relax_ref`` over a fused
+    run's (R, E) stacked edge tables (or a batch axis) in one shot.
+
+    pv: (R, E, P); pdata: (R, E); L: (P,); bw: (P, P).
+    Returns (minl (R, E, P), argl (R, E, P) int32).
+    """
+    P = L.shape[0]
+    off = 1.0 - jnp.eye(P, dtype=pv.dtype)
+    comm = (L[:, None] + pdata[..., None, None] / bw) * off        # (R,E,Pl,Pj)
+    cand = pv[..., :, None] + comm                                  # (R,E,Pl,Pj)
+    return jnp.min(cand, axis=-2), jnp.argmin(cand, axis=-2).astype(jnp.int32)
+
+
 def ceft_relax_ref(pv, pdata, validp, L, bw):
     """One CEFT level relaxation (paper eq. 4 inner loops), dense form.
 

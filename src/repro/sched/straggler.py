@@ -6,16 +6,20 @@ homogeneous at launch becomes heterogeneous when a slice degrades (thermal
 throttling, a flaky ICI link, a preempted host).  CEFT's class-view cost model
 absorbs the measurement directly (scale the class's comp column), and the
 re-planned CEFT-CPOP schedule routes critical-path work away from the slow
-class -- with vectorized/batched CEFT (ceft_jax) cheap enough to run inside
-the training loop's control plane.
+class.  The re-planning sweeps run on the *batched CSR* formulation
+(``ceft_jax_batch_csr``: shared segment tables, vmapped cost planes), so each
+re-plan costs O(e·P²) device work — the paper's §5 bound — instead of the
+padded dense sweep's O(levels·W·D·P²).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 
-from ..core import ceft, ceft_cpop
+from ..core import ceft_cpop
+from ..core.ceft_jax import ceft_batch_csr_results
 from ..core.machine import Machine
 from ..core.taskgraph import TaskGraph
 
@@ -29,6 +33,22 @@ class StragglerEvent:
     new_makespan: float
 
 
+def _content_key(g: TaskGraph, comp: np.ndarray, m: Machine) -> str:
+    """Content hash of a (graph, costs, machine) planning problem.
+
+    Keys the nominal-schedule cache by *value*, not object identity: a graph
+    or cost array that is rebuilt between steps (same edges, fresh object —
+    e.g. a re-built layer DAG) must still hit the cache.
+    """
+    h = hashlib.sha1()
+    for a in (g.cindptr, g.cindices, g.cdata, comp, m.L, m.bw, m.counts):
+        a = np.ascontiguousarray(a)
+        h.update(a.dtype.str.encode())
+        h.update(np.asarray(a.shape, np.int64).tobytes())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
 class StragglerMonitor:
     """EWMA per device class; replan when a class drifts > threshold."""
 
@@ -40,25 +60,11 @@ class StragglerMonitor:
         self.events: list[StragglerEvent] = []
         # nominal-schedule cache: the baseline CEFT-CPOP depends only on
         # (graph, comp, machine), not on the triggering event -- recomputing it
-        # per event doubled the replan cost.  The graph is keyed by identity
-        # (held so its id cannot be recycled); cost arrays are compared by
-        # value (copies held) so in-place mutation of comp / m.L / m.bw cannot
-        # serve a stale baseline.
-        self._nominal_key: tuple | None = None
+        # per event doubled the replan cost.  Keyed by content hash
+        # (_content_key) so re-built but equal inputs hit the cache and
+        # in-place mutation of comp / m.L / m.bw cannot serve a stale baseline.
+        self._nominal_key: str | None = None
         self._nominal_sched = None
-
-    def _nominal(self, g: TaskGraph, comp: np.ndarray, m: Machine):
-        stale = (
-            self._nominal_key is None
-            or self._nominal_key[0] is not g
-            or not np.array_equal(self._nominal_key[1], comp)
-            or not np.array_equal(self._nominal_key[2], m.L)
-            or not np.array_equal(self._nominal_key[3], m.bw)
-        )
-        if stale:
-            self._nominal_sched = ceft_cpop(g, comp, m, ceft(g, comp, m))
-            self._nominal_key = (g, comp.copy(), np.copy(m.L), np.copy(m.bw))
-        return self._nominal_sched
 
     def observe(self, class_times: np.ndarray) -> np.ndarray:
         """Update EWMAs; returns per-class slowdown factors (>= 1)."""
@@ -72,13 +78,29 @@ class StragglerMonitor:
     def maybe_replan(self, step: int, g: TaskGraph, comp: np.ndarray, m: Machine,
                      class_times: np.ndarray):
         """Returns (schedule, event|None).  Schedules with degraded costs when
-        any class trips the threshold; otherwise schedules with nominal costs."""
+        any class trips the threshold; otherwise schedules with nominal costs.
+
+        Both the degraded sweep and (when the cache is cold) the nominal
+        baseline sweep go through one batched CSR dispatch sequence: the
+        segment tables are shared, only the cost planes differ.
+        """
         slow = self.observe(class_times)
         if (slow < self.threshold).all():
             return None, None
         degraded = comp * slow[None, :]
-        base = self._nominal(g, comp, m)
-        new = ceft_cpop(g, degraded, m, ceft(g, degraded, m))
+        key = _content_key(g, comp, m)
+        planes = [degraded]
+        if key != self._nominal_key:
+            planes.append(comp)
+        B = len(planes)
+        Ls = np.repeat(np.asarray(m.L, np.float32)[None], B, 0)
+        bws = np.repeat(np.asarray(m.bw, np.float32)[None], B, 0)
+        results = ceft_batch_csr_results(g, np.stack(planes), Ls, bws)
+        if key != self._nominal_key:
+            self._nominal_sched = ceft_cpop(g, comp, m, results[1])
+            self._nominal_key = key
+        base = self._nominal_sched
+        new = ceft_cpop(g, degraded, m, results[0])
         worst = int(np.argmax(slow))
         ev = StragglerEvent(step, worst, float(slow[worst]),
                             float(base.makespan), float(new.makespan))

@@ -42,6 +42,93 @@ def test_realworld_csv():
     assert any("fig15_18" in l for l in out)
 
 
+# ------------------------------------------------- perf-regression gate (ISSUE 4)
+def _traj(rows, scale=0.05):
+    base = {"bench": "ceft_throughput", "graph": "rgg_high", "impl": "jax_csr",
+            "n": 64, "P": 4, "e": 256}
+    return {"schema": 1, "scale": scale,
+            "rows": [{**base, **r} for r in rows]}
+
+
+def test_check_regression_passes_on_equal_and_faster_rows():
+    from benchmarks.check_regression import check
+    baseline = _traj([{"ms": 2.0}, {"graph": "star", "ms": 5.0}])
+    fresh = _traj([{"ms": 2.1}, {"graph": "star", "ms": 1.0}])
+    assert check(baseline, fresh) == []
+
+
+def test_check_regression_fails_on_2x_slowdown():
+    from benchmarks.check_regression import check
+    baseline = _traj([{"ms": 2.0}])
+    fresh = _traj([{"ms": 6.5}])  # 3.25x and > abs floor
+    failures = check(baseline, fresh)
+    assert len(failures) == 1 and "3.2" in failures[0]
+
+
+def test_check_regression_tolerates_smoke_scale_noise():
+    """Sub-millisecond rows can blip >2x from scheduler noise alone: the
+    absolute-ms floor keeps them from failing the gate."""
+    from benchmarks.check_regression import check
+    baseline = _traj([{"ms": 0.10}])
+    fresh = _traj([{"ms": 0.35}])  # 3.5x but only +0.25ms
+    assert check(baseline, fresh) == []
+
+
+def test_check_regression_skips_rows_absent_from_baseline():
+    from benchmarks.check_regression import check
+    baseline = _traj([{"ms": 2.0}])
+    fresh = _traj([{"ms": 2.0}, {"graph": "brand_new", "ms": 500.0}])
+    assert check(baseline, fresh) == []
+
+
+def test_check_regression_gates_the_impl_family_by_prefix():
+    """--impl jax_csr must also gate the batched jax_csr_vmap8 row."""
+    from benchmarks.check_regression import check
+    baseline = _traj([{"ms": 2.0}, {"impl": "jax_csr_vmap8", "ms": 2.0}])
+    fresh = _traj([{"ms": 2.0}, {"impl": "jax_csr_vmap8", "ms": 30.0}])
+    failures = check(baseline, fresh)
+    assert len(failures) == 1 and "15.0" in failures[0]
+    # non-family rows (e.g. jax_padded) stay exempt
+    baseline = _traj([{"ms": 2.0}, {"impl": "jax_padded", "ms": 2.0}])
+    fresh = _traj([{"ms": 2.0}, {"impl": "jax_padded", "ms": 30.0}])
+    assert check(baseline, fresh) == []
+
+
+def test_check_regression_fails_when_gate_disarmed_or_scale_mismatch():
+    from benchmarks.check_regression import check
+    baseline = _traj([{"ms": 2.0}])
+    # renamed graph: zero matched rows must fail, not silently pass
+    fresh = _traj([{"graph": "renamed", "ms": 2.0}])
+    assert any("disarmed" in f for f in check(baseline, fresh))
+    # cross-scale timings are not comparable
+    assert any("scale" in f for f in check(baseline, _traj([{"ms": 2.0}], scale=1.0)))
+
+
+def test_check_regression_cli_roundtrip(tmp_path):
+    import json
+    from benchmarks.check_regression import main
+    b, f = tmp_path / "base.json", tmp_path / "fresh.json"
+    b.write_text(json.dumps(_traj([{"ms": 2.0}])))
+    f.write_text(json.dumps(_traj([{"ms": 2.0}])))
+    assert main([str(b), str(f)]) == 0
+    f.write_text(json.dumps(_traj([{"ms": 30.0}])))
+    assert main([str(b), str(f)]) == 1
+
+
+def test_throughput_json_rows_cover_new_impls_and_deep_graphs():
+    """The trajectory file must carry the fused-CSR story: batched-CSR rows
+    and the deep narrow (chain / GE) rows the fusion targets."""
+    from benchmarks import ceft_throughput
+    rows: list = []
+    _capture(ceft_throughput.run, json_rows=rows)
+    benches = {r["bench"] for r in rows}
+    assert "ceft_deep" in benches
+    graphs = {r["graph"] for r in rows if r["bench"] == "ceft_deep"}
+    assert {"chain", "realworld_GE"} <= graphs
+    impls = {r["impl"] for r in rows}
+    assert {"jax_vmap8", "jax_csr_vmap8"} <= impls
+
+
 def test_summarize_roundtrip(tmp_path):
     from benchmarks import table3, summarize
     buf = io.StringIO()

@@ -164,8 +164,11 @@ def test_bucketed_jit_shapes_bounded():
         ceft_jax_csr(wl.graph, wl.comp, wl.machine)
     new = set(CSR_TRACES) - before
     # naive shape handling would compile >= one sweep per graph (and the
-    # per-level formulation, one per level: hundreds); buckets keep it O(log n)
-    bound = 4 * int(np.ceil(np.log2(max(ns))))
+    # per-level formulation, one per level: hundreds); buckets keep it
+    # O(log).  Fused super-steps (ISSUE 4) add a pow2 run-length axis to the
+    # jit key -- a further log(depth) factor (empirically ~4 distinct run
+    # buckets here), still far below one shape per level
+    bound = 8 * int(np.ceil(np.log2(max(ns))))
     assert 0 < len(new) <= bound, (len(new), bound)
 
     # re-planning shape: sweeping the same graphs again (new costs) retraces
@@ -175,6 +178,187 @@ def test_bucketed_jit_shapes_bounded():
         comp2 = wl.comp * rng.uniform(1.0, 2.0, size=wl.comp.shape[1])[None, :]
         ceft_jax_csr(wl.graph, comp2, wl.machine)
     assert len(set(CSR_TRACES) - before) == 0
+
+
+# ------------------------------------------------------- fused super-steps (ISSUE 4)
+def test_fused_superstep_equivalence_chain():
+    """64 relaxation levels, all in one (W, E) bucket: the whole chain must
+    sweep as fused super-steps and still match Algorithm 1 exactly."""
+    rng = np.random.default_rng(40)
+    g = linear_chain(65, data=1.5)
+    _assert_equiv(g, rng.uniform(1, 10, (65, 3)), _machine(3))
+
+
+def test_fused_superstep_equivalence_ge_like():
+    """GE graphs are deep with slowly shrinking widths: runs break only at
+    pow2 bucket boundaries, exercising multi-run sweeps."""
+    rng = np.random.default_rng(41)
+    g = gaussian_elimination(9)
+    _assert_equiv(g, rng.uniform(1, 10, (g.n, 4)), _machine(4))
+
+
+def test_fused_superstep_equivalence_single_level():
+    """A graph with a single level (no edges at all): the fused sweep runs
+    zero super-steps and the result is pure comp."""
+    rng = np.random.default_rng(42)
+    g = from_edges(6, [])
+    comp = rng.uniform(1, 10, (6, 3))
+    _assert_equiv(g, comp, _machine(3))
+    res = ceft_jax_csr(g, comp, _machine(3))
+    np.testing.assert_allclose(res.ceft, comp.astype(np.float32), rtol=1e-6)
+    assert (res.pred_task == -1).all()
+
+
+def test_fusion_reduces_dispatch_count_on_deep_chain():
+    """A 64-level chain used to dispatch one jitted step per level from
+    Python; fused same-bucket super-steps collapse it to O(1) scanned
+    dispatches (and at most O(log) traces across chain depths)."""
+    rng = np.random.default_rng(43)
+    g = linear_chain(65)
+    comp = rng.uniform(1, 10, (65, 3))
+    m = _machine(3)
+    inputs = csr_device_inputs(g, comp, m)
+    runs = inputs[0]  # (layout, tasks, ...) per fused run
+    n_dispatch = len(runs)
+    n_levels_covered = sum(int(r[1].shape[0]) for r in runs)
+    assert n_dispatch <= 2, f"chain not fused: {n_dispatch} dispatches"
+    assert n_levels_covered >= 64  # every relaxation level is inside a run
+    # the fused sweep itself still matches the unfused semantics
+    _assert_equiv(g, comp, m)
+
+    # more chains in the same (v, W, E, run-length) buckets (vertex counts
+    # 58..64 all bucket to v_b=64, depths 57..63 to a run of 64): one compiled
+    # super-step serves them all -- zero new traces after the first
+    ceft_jax_csr(linear_chain(64), rng.uniform(1, 10, (64, 3)), m)
+    before = set(CSR_TRACES)
+    for n in (58, 61, 63):
+        ceft_jax_csr(linear_chain(n), rng.uniform(1, 10, (n, 3)), m)
+    assert len(set(CSR_TRACES) - before) == 0
+
+
+def test_fuse_levels_noop_padding_rows():
+    """Padded no-op levels (e_real == 0) carry only padding ids, so a scanned
+    super-step can execute them without touching real DP rows."""
+    g = linear_chain(8)  # 7 relaxation levels -> padded to a pow2 run of 8
+    segs = csr_level_segments(g)
+    from repro.core.taskgraph import fuse_levels
+    widths = [8] * (segs.n_levels - 1)
+    ecaps = [8] * (segs.n_levels - 1)
+    runs = fuse_levels(segs, widths, ecaps, pad_vertex=99,
+                       pad_run=lambda r: 8)
+    (run,) = runs
+    assert run.tasks.shape == (8, 8) and run.e_real[-1] == 0
+    assert (run.tasks[-1] == 99).all() and (run.edge_src[-1] == 99).all()
+    assert (run.edge_seg[-1] == run.width - 1).all()
+    # real rows reproduce the per-level segments exactly
+    for r in range(7):
+        t = segs.level_tasks(r + 1)
+        es, ed, eg = segs.level_edges(r + 1)
+        np.testing.assert_array_equal(run.tasks[r, : len(t)], t)
+        np.testing.assert_array_equal(run.edge_src[r, : len(es)], es)
+        np.testing.assert_array_equal(run.edge_data[r, : len(es)], ed)
+        np.testing.assert_array_equal(run.edge_seg[r, : len(es)], eg)
+
+
+def test_hybrid_layout_choice():
+    """The per-run layout policy: no within-level in-degree skew (chain, GE)
+    -> run-local dense (R, W, D) tables; skewed fan-in (heavy tail) -> the
+    O(e) segment layout.  Both are bit-identical to ceft_jax (asserted by
+    the equivalence suite); this pins the policy itself."""
+    rng = np.random.default_rng(50)
+    m = _machine(3)
+
+    def layouts(g):
+        comp = rng.uniform(1, 10, (g.n, 3))
+        return [r[0] for r in csr_device_inputs(g, comp, m)[0]]
+
+    assert set(layouts(linear_chain(40))) == {"dense"}
+    assert set(layouts(gaussian_elimination(8))) == {"dense"}
+    assert "seg" in layouts(heavy_tail_fan_in(150, np.random.default_rng(51)))
+
+
+def test_fuse_levels_dense_run_local_buckets():
+    """Dense-layout runs are built from the CSR segments at *run-local*
+    (W, D) buckets — the star graph's sink level must not pay for the
+    40-wide source level, and the slot order must match the
+    padded_level_tables convention (k-th slot = k-th parent ascending)."""
+    from repro.core.taskgraph import fuse_levels_dense, padded_level_tables
+    g = star_fan_in(41)  # level 1 = the sink: W=1, D=40
+    segs = csr_level_segments(g)
+    run = fuse_levels_dense(segs, 1, 2, 1, 48, pad_run=lambda r: 2)
+    assert run.tasks.shape == (2, 1) and run.par.shape == (2, 1, 48)
+    assert run.tasks[0, 0] == 40 and (run.tasks[1] == -1).all()  # no-op pad row
+    np.testing.assert_array_equal(run.par[0, 0, :40], np.arange(40))
+    assert (run.par[0, 0, 40:] == -1).all() and (run.par[1] == -1).all()
+    # same slot convention as the global padded tables
+    tables = padded_level_tables(g)
+    np.testing.assert_array_equal(run.par[0, 0, :40], tables["par"][1, 0, :40])
+    np.testing.assert_array_equal(run.pdata[0, 0, :40], tables["pdata"][1, 0, :40])
+    with pytest.raises(ValueError):  # real parents must fit the caps
+        fuse_levels_dense(segs, 1, 2, 1, 8)
+
+
+# ------------------------------------------------------- batched CSR (ISSUE 4)
+def _batch_inputs(g, B, P, rng):
+    comps = rng.uniform(1, 10, (B, g.n, P)).astype(np.float32)
+    Ls = rng.uniform(0, 1, (B, P)).astype(np.float32)
+    bws = rng.uniform(0.5, 2, (B, P, P)).astype(np.float32)
+    return comps, Ls, bws
+
+
+@pytest.mark.parametrize("seed,g", [
+    (301, linear_chain(33)),
+    (302, gaussian_elimination(6)),
+    (303, star_fan_in(40)),
+    (304, heavy_tail_fan_in(60, np.random.default_rng(304))),
+    (305, epigenomics(5)),
+])
+def test_batch_csr_bit_identical_to_batch_padded(seed, g):
+    """ceft_jax_batch_csr must be bit-identical (values AND predecessor
+    tables) to the vmapped padded sweep on the adversarial suite."""
+    from repro.core.ceft_jax import ceft_jax_batch, ceft_jax_batch_csr
+    rng = np.random.default_rng(seed)
+    comps, Ls, bws = _batch_inputs(g, 3, 4, rng)
+    pad = ceft_jax_batch(g, comps, Ls, bws)
+    csr = ceft_jax_batch_csr(g, comps, Ls, bws)
+    for a, b, name in zip(pad, csr, ["ceft", "ptask", "pproc"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_batch_csr_paths_match_reference():
+    """Each batched plane, finalized, backtracks the same critical path as
+    Algorithm 1 run on that plane alone."""
+    from repro.core.ceft_jax import ceft_batch_csr_results
+    rng = np.random.default_rng(310)
+    g = gaussian_elimination(5)
+    B, P = 3, 3
+    comps, Ls, bws = _batch_inputs(g, B, P, rng)
+    results = ceft_batch_csr_results(g, comps, Ls, bws)
+    from repro.core.machine import Machine
+    for b in range(B):
+        m = Machine(L=np.asarray(Ls[b], np.float64),
+                    bw=np.asarray(bws[b], np.float64),
+                    counts=np.ones(P, np.int64))
+        ref = ceft_reference(g, np.asarray(comps[b], np.float64), m)
+        assert results[b].path == ref.path
+        assert results[b].cpl == pytest.approx(ref.cpl, rel=2e-5)
+
+
+def test_csr_batch_segments_shared_structure():
+    """The segment arrays are batch-invariant; cost planes stack to (B,v,P)
+    float32 and shape mismatches are rejected."""
+    from repro.core.taskgraph import csr_batch_segments
+    rng = np.random.default_rng(311)
+    g = linear_chain(10)
+    planes = [rng.uniform(1, 10, (10, 2)) for _ in range(4)]
+    segs, comps = csr_batch_segments(g, planes)
+    single = csr_level_segments(g)
+    np.testing.assert_array_equal(segs.task_ids, single.task_ids)
+    np.testing.assert_array_equal(segs.edge_src, single.edge_src)
+    assert comps.shape == (4, 10, 2) and comps.dtype == np.float32
+    with pytest.raises(ValueError):
+        csr_batch_segments(g, rng.uniform(1, 10, (4, 9, 2)))
 
 
 # ------------------------------------------------------------------- bench JSON

@@ -123,6 +123,46 @@ def test_ceft_jax_csr_with_pallas_edge_relax_end_to_end(seed):
     assert b.path == a.path
 
 
+SUPERSTEP_SHAPES = [(1, 5, 3), (4, 128, 16), (3, 300, 7), (2, 64, 64), (1, 1, 1)]
+
+
+@pytest.mark.parametrize("shape", SUPERSTEP_SHAPES)
+def test_edge_relax_superstep_matches_ref(shape):
+    """Stacked super-step tile variant (ISSUE 4): a fused run's (R, E, P)
+    edge tables relaxed in one pallas_call, vs the stacked oracle."""
+    from repro.kernels import edge_relax_superstep
+    from repro.kernels.ref import edge_relax_superstep_ref
+
+    R, E, P = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    pv = jnp.asarray(rng.uniform(0, 100, (R, E, P)), jnp.float32)
+    pdata = jnp.asarray(rng.uniform(0, 10, (R, E)), jnp.float32)
+    L = jnp.asarray(rng.uniform(0, 2, (P,)), jnp.float32)
+    bw = jnp.asarray(rng.uniform(0.5, 2, (P, P)), jnp.float32)
+    got = edge_relax_superstep(pv, pdata, L, bw)
+    want = edge_relax_superstep_ref(pv, pdata, L, bw)
+    for g, w, name in zip(got, want, ["minl", "argl"]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+
+
+def test_edge_relax_superstep_consistent_with_per_level():
+    """Each stacked slice equals the single-level edge_relax on that slice:
+    the super-step variant is the same contraction, batched over the run."""
+    from repro.kernels import edge_relax_superstep
+
+    rng = np.random.default_rng(77)
+    R, E, P = 4, 96, 5
+    pv = jnp.asarray(rng.uniform(0, 100, (R, E, P)), jnp.float32)
+    pdata = jnp.asarray(rng.uniform(0, 10, (R, E)), jnp.float32)
+    L = jnp.asarray(rng.uniform(0, 2, (P,)), jnp.float32)
+    bw = jnp.asarray(rng.uniform(0.5, 2, (P, P)), jnp.float32)
+    minl, argl = edge_relax_superstep(pv, pdata, L, bw)
+    for r in range(R):
+        m1, a1 = edge_relax(pv[r], pdata[r], L, bw)
+        np.testing.assert_array_equal(np.asarray(minl[r]), np.asarray(m1))
+        np.testing.assert_array_equal(np.asarray(argl[r]), np.asarray(a1))
+
+
 @pytest.mark.parametrize("shape", [(8, 3, 4), (16, 7, 13)])
 def test_ceft_relax_bf16(shape):
     """bf16 kernel path agrees with the bf16 oracle (TPU's native dtype)."""

@@ -127,6 +127,45 @@ def test_partitioner_prefers_bandwidth_class_for_decode():
     assert {s.device_class for s in dec.stages} == {"v5p-32"}
 
 
+def test_straggler_nominal_cache_hits_on_rebuilt_equal_inputs():
+    """Regression (ISSUE 4): the nominal-baseline cache used to key the graph
+    by object identity — a re-built but equal (graph, comp, machine) triple
+    recomputed the baseline.  Content-hash keys must hit the cache."""
+    from repro.core import from_edges, uniform_machine
+
+    edges = [(0, 2, 1.0), (1, 2, 2.0), (2, 3, 1.0)]
+    comp = np.asarray([[2.0, 3.0], [1.0, 4.0], [3.0, 2.0], [2.0, 2.0]])
+    m = uniform_machine(2, bw=1.0, L=0.1)
+    trip = np.asarray([3.0, 1.0])  # class 0 3x slow -> replan fires
+
+    mon = StragglerMonitor(2, threshold=1.3)
+    mon.observe(np.ones(2))  # seed the EWMA baseline at nominal speed
+    g1 = from_edges(4, edges)
+    sched1, ev1 = mon.maybe_replan(1, g1, comp, m, trip)
+    assert ev1 is not None
+    base1 = mon._nominal_sched
+    assert base1 is not None
+
+    # rebuilt-but-equal graph and a fresh equal comp copy: cache must hit
+    g2 = from_edges(4, list(edges))
+    sched2, ev2 = mon.maybe_replan(2, g2, comp.copy(), m, trip)
+    assert ev2 is not None
+    assert mon._nominal_sched is base1, "content-equal inputs missed the cache"
+    assert ev2.old_makespan == ev1.old_makespan
+
+    # genuinely different costs: the baseline must be recomputed
+    mon.maybe_replan(3, g2, comp * 2.0, m, trip)
+    base3 = mon._nominal_sched
+    assert base3 is not base1
+
+    # instance counts are part of the key too (ceft_cpop schedules onto
+    # m.inst_class): same L/bw/costs with a lost instance must not hit
+    from repro.core import Machine
+    m2 = Machine(L=m.L, bw=m.bw, counts=np.asarray([2, 1]))
+    mon.maybe_replan(4, g2, comp * 2.0, m2, trip)
+    assert mon._nominal_sched is not base3
+
+
 def test_straggler_monitor_reroutes_critical_path():
     """Degrading the preferred class makes the re-planned schedule choose a
     different class for the critical path -- the paper's adaptivity claim."""
