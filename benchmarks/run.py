@@ -18,7 +18,7 @@ import time
 
 def main() -> None:
     from . import (ceft_throughput, kernel_bench, partitioner_bench,
-                   realworld, sweeps, table3)
+                   realworld, serve_router, sweeps, table3)
     from .common import scale
     suites = {
         "table3": table3.run,                      # Table 3 + Figs 5-6
@@ -26,11 +26,13 @@ def main() -> None:
         "ranks": lambda: sweeps.run(ranks=True, n_rep=6),   # Figs 19-20 (§8.2)
         "realworld": realworld.run,                # Figs 15-18
         "ceft_throughput": ceft_throughput.run,    # §5 complexity / §Perf
+        "serve_router": serve_router.run,          # router tick throughput
         "kernel": kernel_bench.run,                # kernel layer
         "partitioner": partitioner_bench.run,      # beyond-paper
     }
     # suites whose run() mirrors rows into the --json trajectory file
-    json_suites = {"ceft_throughput": ceft_throughput.run}
+    json_suites = {"ceft_throughput": ceft_throughput.run,
+                   "serve_router": serve_router.run}
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", choices=list(suites))
     ap.add_argument("--json", metavar="PATH", default=None,

@@ -61,6 +61,20 @@ if [ -n "$violations" ]; then
 fi
 echo "ci: profile choke-point invariant holds"
 
+# Profile registry (ISSUE 5): CLI --profile choices derive from the PROFILES
+# registry via models/common.py profile_names().  No launcher (or anything
+# else in src/) may re-list the profile names in a hardcoded choices list --
+# the lists drift the moment a profile is added.
+echo "ci: forbidden-API grep (hardcoded profile-name choices lists)"
+violations=$(grep -rnE 'choices=\[[^]]*"(baseline|opt1|serve|moe_ep)"' \
+    src/ --include='*.py' | grep -v "^src/repro/models/common.py:" || true)
+if [ -n "$violations" ]; then
+    echo "ci: FAIL -- hardcoded profile-name list (use models.common.profile_names()):"
+    echo "$violations"
+    exit 1
+fi
+echo "ci: profile-registry invariant holds"
+
 # Level tables (ISSUE 3): the padded dense tables and the CSR level segments
 # are built only by core/taskgraph.py (padded_level_tables /
 # csr_level_segments).  No other module may reconstruct them by iterating
@@ -95,6 +109,14 @@ echo "ci: bucket-policy choke-point invariant holds"
 echo "ci: tier-1 tests"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
+# Router smoke (ISSUE 5): the CEFT-routed multi-tenant front-end end-to-end
+# on real smoke engines -- two tenants, a two-profile pool, tiny decode.
+echo "ci: router smoke (repro.launch.serve --router)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
+    --router --tenants 2 --pool serve,baseline --requests 2 \
+    --prompt-len 8 --max-new 2 > /dev/null
+echo "ci: router smoke ok"
+
 # Perf trajectory + regression gate (ISSUE 3 + 4): refresh the
 # machine-readable CEFT baseline on every CI pass, then diff the fresh rows
 # against the *committed* baseline -- a >2x slowdown of any jax_csr row fails
@@ -113,8 +135,8 @@ if ! git show HEAD:BENCH_ceft.json > "$baseline" 2>/dev/null; then
     cp BENCH_ceft.json "$baseline"   # no git history: gate against last run
 fi
 REPRO_BENCH_SCALE=0.05 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only ceft_throughput --json BENCH_ceft.json \
-    > /dev/null
+    python -m benchmarks.run --only ceft_throughput serve_router \
+    --json BENCH_ceft.json > /dev/null
 echo "ci: wrote BENCH_ceft.json"
 echo "ci: perf-regression gate (fresh jax_csr rows vs committed baseline)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

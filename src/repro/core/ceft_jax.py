@@ -45,6 +45,7 @@ from .ceft import CeftResult, _finalize
 from .machine import Machine
 from .taskgraph import (
     TaskGraph,
+    from_edge_arrays,
     csr_batch_segments,
     csr_level_segments,
     fuse_levels,
@@ -353,15 +354,25 @@ def _dense_superstep_init_impl(
     )
 
 
-@functools.lru_cache(maxsize=None)
 def _superstep_fns(relax: Callable):
     """Module-level cached jitted super-steps for one edge relax_fn, keyed
     (batched, layout, masked, with_init) with layout in {"seg", "dense"}.
     Dense-layout runs always use the XLA dense relax (a custom ``relax``
     plugs into the segment layout only).  Carry buffers are donated off-CPU —
     the DP table then updates in place; on CPU donation is unsupported and
-    each donated call pays a fallback copy, so it is disabled there."""
-    donate = () if jax.default_backend() == "cpu" else (0, 1, 2)
+    each donated call pays a fallback copy, so it is disabled there.
+
+    The backend is read per *call*, not once at closure-build time: the cache
+    is keyed (relax, backend), so a backend selected after the first sweep
+    (tests forcing CPU, a GPU picked up mid-process) gets its own jitted
+    closures with the right donation policy instead of inheriting whichever
+    backend happened to be default first (ISSUE 5 regression)."""
+    return _superstep_fns_for(relax, jax.default_backend())
+
+
+@functools.lru_cache(maxsize=None)
+def _superstep_fns_for(relax: Callable, backend: str):
+    donate = () if backend == "cpu" else (0, 1, 2)
     fns = {}
     for batched in (False, True):
         tag = "csr_batch" if batched else "csr"
@@ -396,6 +407,7 @@ def _superstep_fns(relax: Callable):
             dcont, donate_argnums=donate
         )
         fns[(batched, "dense", False, True)] = jax.jit(dinit)
+    fns["donate"] = donate  # introspectable: tests assert the policy matches
     return fns
 
 
@@ -713,3 +725,56 @@ def ceft_batch_csr_results(
     return [
         _finalize(g, ceft_np[b], pt_np[b], pp_np[b]) for b in range(ceft_np.shape[0])
     ]
+
+
+# ------------------------------------------------------ in-memory request DAGs
+# one-slot *content*-keyed graph cache for online planners (the serving
+# router, re-planning ticks) that rebuild their DAG from edge arrays every
+# tick: structurally-equal arrays map to the SAME TaskGraph object, so the
+# identity-keyed _GRAPH_STATE slot above hits and the fused segment tables
+# are not rebuilt per tick.  Same torn-state-free discipline as _GRAPH_STATE:
+# the whole entry lives under one key as an immutable tuple.
+_REQUEST_GRAPH: dict = {}
+
+
+def request_graph(n: int, src, dst, data) -> TaskGraph:
+    """TaskGraph for an in-memory request DAG, one-slot content cache.
+
+    ``src``/``dst`` must already be topological (src < dst), the natural
+    shape for prefill->decode chains.  A steady-state router whose pending
+    mix keeps the same DAG structure across ticks pays the host-side
+    segment/fusion build exactly once."""
+    src = np.ascontiguousarray(src, np.int32)
+    dst = np.ascontiguousarray(dst, np.int32)
+    data = np.ascontiguousarray(data, np.float64)
+    key = (int(n), src.tobytes(), dst.tobytes(), data.tobytes())
+    entry = _REQUEST_GRAPH.get("entry")
+    if entry is not None and entry[0] == key:
+        return entry[1]
+    g = from_edge_arrays(n, src, dst, data)
+    _REQUEST_GRAPH["entry"] = (key, g)
+    return g
+
+
+def plan_request_dag(
+    n: int, src, dst, data, comp: np.ndarray, m: Machine,
+    *, relax: Callable = xla_edge_relax,
+) -> CeftResult:
+    """Plan one in-memory request DAG through the fused CSR sweep.
+
+    The public entry point for online dispatchers (repro.serve.router): edge
+    arrays in, mapped critical path out, without the caller owning TaskGraph
+    construction or the device-state caching."""
+    return ceft_jax_csr(request_graph(n, src, dst, data), comp, m, relax=relax)
+
+
+def plan_request_dags(
+    n: int, src, dst, data, comps: np.ndarray, Ls: np.ndarray, bws: np.ndarray,
+    *, relax: Callable = xla_edge_relax,
+) -> list[CeftResult]:
+    """Batched scenario planning over one request DAG (nominal + degraded
+    cost planes in a single vmapped dispatch — the straggler loop's shape,
+    reused by the router when a degraded engine must shed work)."""
+    return ceft_batch_csr_results(
+        request_graph(n, src, dst, data), comps, Ls, bws, relax=relax
+    )

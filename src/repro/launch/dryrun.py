@@ -29,7 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import configs as C
-from ..models.common import resolve_spec, sharding_profile, tree_map_pspec
+from ..models.common import (profile_names, resolve_spec, sharding_profile,
+                             tree_map_pspec)
 from ..models.model import build
 from ..substrate import (
     compiled_cost_analysis,
@@ -238,8 +239,7 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--only-missing", action="store_true")
     ap.add_argument("--devices", type=int, default=0, help="driver: fake device count")
-    ap.add_argument("--profile", default="baseline",
-                    choices=["baseline", "opt1", "serve", "moe_ep"])
+    ap.add_argument("--profile", default="baseline", choices=profile_names())
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
     if args.all:

@@ -60,6 +60,7 @@ from ..models.common import (
     abstract_params,
     active_profile,
     param_shardings,
+    profile_names,
     resolve_profile,
     resolve_spec,
     sharding_profile,
@@ -455,8 +456,7 @@ def main():
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "moe"])
     ap.add_argument("--smoke", action="store_true",
                     help="small fake fleet, smoke configs + shrunk cells")
-    ap.add_argument("--profile", default="baseline",
-                    choices=["baseline", "opt1", "serve", "moe_ep"])
+    ap.add_argument("--profile", default="baseline", choices=profile_names())
     ap.add_argument("--out", default="experiments/roofline")
     args = ap.parse_args()
     mesh = make_mesh(args.mesh, smoke=args.smoke)

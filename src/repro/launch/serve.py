@@ -2,13 +2,62 @@
 (smoke scale on CPU; same engine drives production meshes).
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --batch 4
+
+Router mode (--router): a CEFT-routed multi-tenant front-end over a pool of
+engines pinned to different sharding profiles; each tick the pending
+requests are planned as a task DAG and dispatched along the mapped critical
+path (see repro.serve.router).
+
+  PYTHONPATH=src python -m repro.launch.serve --router --tenants 2 \
+      --pool serve,baseline --requests 4 --max-new 4
 """
 import argparse
 
 import numpy as np
 
 from .. import configs as C
-from ..serve import Engine, ServeConfig
+from ..models.common import profile_names
+from ..serve import Engine, EngineSlot, Request, Router, ServeConfig
+
+
+def run_router(args) -> None:
+    pool = [p.strip() for p in args.pool.split(",") if p.strip()]
+    unknown = [p for p in pool if p not in profile_names()]
+    if unknown:
+        raise SystemExit(f"unknown pool profile(s) {unknown}; "
+                         f"known: {profile_names()}")
+    cfg = C.get(args.arch, smoke=True)
+    slots = [EngineSlot(f"{args.arch}:{p}#{i}", Engine(cfg, profile=p), p)
+             for i, p in enumerate(pool)]
+    router = Router(slots, max_batch=args.batch)
+    rng = np.random.default_rng(0)
+    # tenant i leans to its own prompt-length bucket -> a mixed-class DAG
+    tenant_of: dict[int, str] = {}
+    for t in range(args.tenants):
+        plen = max(2, args.prompt_len >> (t % 2))
+        for _ in range(args.requests):
+            prompt = rng.integers(2, cfg.vocab, plen).astype(np.int32)
+            req = Request(f"tenant{t}", prompt, args.max_new)
+            if router.submit(req):
+                tenant_of[req.rid] = req.tenant
+            else:
+                print(f"tenant{t}: request rejected (admission control)")
+    done = router.serve()
+    print(f"router: {len(done)} requests served on {len(slots)} engines "
+          f"({', '.join(s.name for s in slots)})")
+    counts: dict[str, int] = {}
+    for rid in done:
+        counts[tenant_of[rid]] = counts.get(tenant_of[rid], 0) + 1
+    for tenant in sorted(counts):
+        print(f"router: {tenant}: {counts[tenant]} completed")
+    s = router.stats
+    print(f"router: plans={s['plans']} (batched={s['batched_plans']}) "
+          f"dispatches={s['dispatches']} coalesced={s['coalesced']} "
+          f"split={s['split']} shed={s['shed']}")
+    if router.last_plan is not None:
+        path = router.last_plan.path
+        print(f"router: last critical path (task, engine): {path} "
+              f"cpl={router.last_plan.cpl:.4f}s")
 
 
 def main():
@@ -17,10 +66,20 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--profile", default="serve",
-                    choices=["baseline", "opt1", "serve", "moe_ep"],
+    ap.add_argument("--profile", default="serve", choices=profile_names(),
                     help="sharding profile, scoped to this engine")
+    ap.add_argument("--router", action="store_true",
+                    help="CEFT-routed multi-tenant front-end over a pool")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="router mode: number of synthetic tenants")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="router mode: requests per tenant")
+    ap.add_argument("--pool", default="serve,baseline",
+                    help="router mode: comma-separated profiles, one engine each")
     args = ap.parse_args()
+
+    if args.router:
+        return run_router(args)
 
     cfg = C.get(args.arch, smoke=True)
     eng = Engine(cfg, profile=args.profile)

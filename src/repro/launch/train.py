@@ -7,6 +7,7 @@ import argparse
 
 from .. import configs as C
 from ..configs.base import ShapeCell
+from ..models.common import profile_names
 from ..train import Trainer, TrainerConfig
 from .mesh import make_test_mesh
 
@@ -22,8 +23,7 @@ def main():
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--resume", action="store_true",
                     help="restore the newest valid checkpoint before training")
-    ap.add_argument("--profile", default="opt1",
-                    choices=["baseline", "opt1", "serve", "moe_ep"],
+    ap.add_argument("--profile", default="opt1", choices=profile_names(),
                     help="sharding profile, scoped to this trainer")
     args = ap.parse_args()
 

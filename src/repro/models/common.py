@@ -95,6 +95,16 @@ PROFILES: dict[str, dict[str, tuple[str, ...]]] = {
         "ssm_inner": ("model", "data"),
     },
 }
+
+
+def profile_names() -> list[str]:
+    """Registry-derived profile names, the single source of truth for CLI
+    ``--profile`` choices.  Launchers must consume this instead of re-listing
+    the names (ci.sh greps for drift), so adding a profile here updates every
+    CLI at once."""
+    return sorted(PROFILES)
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardingProfile:
     """An immutable, fully-resolved logical->mesh rules table.

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 
 import numpy as np
 
@@ -31,6 +32,57 @@ class StragglerEvent:
     slowdown: float
     old_makespan: float
     new_makespan: float
+
+
+class EwmaCostTable:
+    """Online per-(workload-class, processor-class) cost model.
+
+    One EWMA row of ``n_classes`` entries per hashable key — the serving
+    router keys by request workload class (per-token generate rates), the
+    training loop keys by layer class.  Shared between the router and the
+    straggler machinery: :meth:`StragglerMonitor.observe` slowdown factors
+    multiply onto these rows via :meth:`comp_matrix`'s ``scale`` argument,
+    so a degraded processor class sheds critical-path work on the very next
+    plan.
+
+    Unobserved entries inside a partially-observed row fall back to the row's
+    observed mean (neutral: new engines get explored, not written off at the
+    ``default``); fully-unobserved rows fall back to ``default``.
+
+    Thread-safe: the router executes micro-batches on per-engine worker
+    threads, each feeding measurements back concurrently.
+    """
+
+    def __init__(self, n_classes: int, alpha: float = 0.3, default: float = 1.0):
+        self.n_classes = int(n_classes)
+        self.alpha = float(alpha)
+        self.default = float(default)
+        self._rows: dict = {}
+        self._lock = threading.Lock()
+
+    def update(self, key, cls: int, value: float) -> None:
+        with self._lock:
+            row = self._rows.get(key)
+            if row is None:
+                row = self._rows[key] = np.full(self.n_classes, np.nan)
+            row[cls] = (value if np.isnan(row[cls])
+                        else self.alpha * value + (1 - self.alpha) * row[cls])
+
+    def row(self, key) -> np.ndarray:
+        """The (n_classes,) cost row for ``key``, NaN-free (see class doc)."""
+        with self._lock:
+            row = self._rows.get(key)
+            if row is None or np.isnan(row).all():
+                return np.full(self.n_classes, self.default)
+            return np.where(np.isnan(row), np.nanmean(row), row)
+
+    def comp_matrix(self, keys, scale=None) -> np.ndarray:
+        """(len(keys), n_classes) cost plane in CEFT's comp-matrix shape,
+        optionally column-scaled by per-class slowdown factors."""
+        out = np.stack([self.row(k) for k in keys])
+        if scale is not None:
+            out = out * np.asarray(scale, np.float64)[None, :]
+        return out
 
 
 def _content_key(g: TaskGraph, comp: np.ndarray, m: Machine) -> str:
@@ -78,17 +130,34 @@ class StragglerMonitor:
     def maybe_replan(self, step: int, g: TaskGraph, comp: np.ndarray, m: Machine,
                      class_times: np.ndarray):
         """Returns (schedule, event|None).  Schedules with degraded costs when
-        any class trips the threshold; otherwise schedules with nominal costs.
+        any class trips the threshold; otherwise schedules with nominal costs
+        (the cached nominal schedule, computed on first call).
 
         Both the degraded sweep and (when the cache is cold) the nominal
         baseline sweep go through one batched CSR dispatch sequence: the
         segment tables are shared, only the cost planes differ.
         """
         slow = self.observe(class_times)
-        if (slow < self.threshold).all():
-            return None, None
-        degraded = comp * slow[None, :]
+        # content-hashed on every call, including quiet steps: an identity
+        # memo would be cheaper but could serve a stale baseline after
+        # in-place mutation of comp / m.L / m.bw (the guarantee _content_key
+        # exists for); the planning arrays are KB-scale, so the hash is
+        # microseconds against a training step
         key = _content_key(g, comp, m)
+        if (slow < self.threshold).all():
+            # Below threshold the docstring always promised the *nominal*
+            # schedule, but this path returned (None, None) and never warmed
+            # the nominal cache -- the first straggler event then paid for
+            # both sweeps at the worst moment (ISSUE 5 regression fix).
+            if key != self._nominal_key:
+                results = ceft_batch_csr_results(
+                    g, np.asarray(comp, np.float32)[None],
+                    np.asarray(m.L, np.float32)[None],
+                    np.asarray(m.bw, np.float32)[None])
+                self._nominal_sched = ceft_cpop(g, comp, m, results[0])
+                self._nominal_key = key
+            return self._nominal_sched, None
+        degraded = comp * slow[None, :]
         planes = [degraded]
         if key != self._nominal_key:
             planes.append(comp)

@@ -1,2 +1,5 @@
 from .engine import Engine, ServeConfig
-__all__ = ["Engine", "ServeConfig"]
+from .queue import AdmissionQueue, Request, workload_class
+from .router import Dispatch, EngineSlot, Router, router_machine
+__all__ = ["AdmissionQueue", "Dispatch", "Engine", "EngineSlot", "Request",
+           "Router", "ServeConfig", "router_machine", "workload_class"]

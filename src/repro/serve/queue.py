@@ -1,0 +1,100 @@
+"""Admission queue for the multi-tenant serving front-end.
+
+Requests carry a tenant and a *workload class* — the (prompt-len, max-new)
+pow2 bucket pair.  The class is the unit the router plans over: CEFT treats
+each pending class as a task chain, so bucketing is what keeps the per-tick
+DAG small (a handful of classes) no matter how many raw requests are queued.
+
+Admission control is per-tenant and global: a tenant that floods the queue
+is rejected at submit() without touching other tenants' backlog, and drain()
+interleaves tenants round-robin so one deep backlog cannot starve the rest.
+Thread-safe: tenants submit from their own threads, the router drains from
+its tick loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from collections import OrderedDict, deque
+
+import numpy as np
+
+_IDS = itertools.count()
+
+
+def _pow2ceil(x: int) -> int:
+    """Smallest power of two >= x (>= 1)."""
+    return 1 << max(0, int(x) - 1).bit_length() if x > 1 else 1
+
+
+def workload_class(prompt_len: int, max_new: int) -> tuple[int, int]:
+    """The (prompt-len, max-new) pow2 bucket pair — the router's task class."""
+    return (_pow2ceil(prompt_len), _pow2ceil(max_new))
+
+
+@dataclasses.dataclass
+class Request:
+    tenant: str
+    prompt: np.ndarray          # (plen,) int32 token ids
+    max_new: int
+    rid: int = dataclasses.field(default_factory=lambda: next(_IDS))
+
+    @property
+    def wclass(self) -> tuple[int, int]:
+        return workload_class(int(self.prompt.shape[0]), int(self.max_new))
+
+
+class AdmissionQueue:
+    """Bounded per-tenant FIFOs with round-robin drain."""
+
+    def __init__(self, max_pending: int = 256, per_tenant: int = 64):
+        self.max_pending = int(max_pending)
+        self.per_tenant = int(per_tenant)
+        self.rejected = 0
+        self._lock = threading.Lock()
+        self._pending: OrderedDict[str, deque[Request]] = OrderedDict()
+        self._n = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return self._n
+
+    def submit(self, req: Request) -> bool:
+        """Admit ``req``; False when the tenant or global bound is hit."""
+        with self._lock:
+            q = self._pending.get(req.tenant)
+            if self._n >= self.max_pending or (q is not None
+                                               and len(q) >= self.per_tenant):
+                # bounds checked before any insertion: a rejected submit from
+                # a never-admitted tenant must not leak a dict entry
+                self.rejected += 1
+                return False
+            if q is None:
+                q = self._pending[req.tenant] = deque()
+            q.append(req)
+            self._n += 1
+            return True
+
+    def drain(self, limit: int | None = None) -> list[Request]:
+        """Pop up to ``limit`` requests, interleaving tenants round-robin
+        (insertion order of first submit) for cross-tenant fairness."""
+        out: list[Request] = []
+        with self._lock:
+            budget = self._n if limit is None else min(limit, self._n)
+            while budget > 0:
+                progressed = False
+                for q in self._pending.values():
+                    if q and budget > 0:
+                        out.append(q.popleft())
+                        self._n -= 1
+                        budget -= 1
+                        progressed = True
+                if not progressed:
+                    break
+            # drop emptied tenants: a long-lived router with ephemeral tenant
+            # ids must not accumulate one permanent dict entry (and one
+            # round-robin scan slot) per tenant ever admitted
+            for t in [t for t, q in self._pending.items() if not q]:
+                del self._pending[t]
+        return out

@@ -1,0 +1,292 @@
+"""CEFT-routed multi-tenant serving front-end (the paper's planner run
+*online* as a dispatch policy).
+
+The mutual-inclusivity claim, applied to serving: a useful critical path of
+the pending work must carry its own mapping of tasks to processor classes.
+Here the tasks are request *workload classes* (prompt-len/max-new buckets,
+see repro.serve.queue) and the processor classes are the pool's engines —
+each pinned to its own sharding profile and/or architecture, made safe to
+run concurrently by the scoped-profile substrate.  Every tick the router:
+
+  1. drains the admission queue and groups requests by workload class,
+  2. models the pending batch as a small task DAG (one prefill -> decode
+     chain per class; edge data = the KV handoff volume),
+  3. prices the DAG with an online EWMA cost table (per-token rates measured
+     from real dispatches, shared machinery with repro.sched.straggler) and
+     the StragglerMonitor's per-engine slowdown factors,
+  4. runs a ``ceft_jax_csr``-family sweep (``plan_request_dag``; the batched
+     ``plan_request_dags`` when an engine is degraded, planning nominal +
+     degraded scenarios in one vmapped dispatch) to get the mapped critical
+     path, and
+  5. dispatches: critical-path classes go to the path's own engine class,
+     off-path classes to their earliest-finish class, and same-class
+     requests coalesce into micro-batches whose added latency stays bounded
+     by the CEFT path length (a micro-batch never grows past the point where
+     it would itself become the critical path).
+
+A degraded engine (StragglerMonitor threshold trip) therefore sheds
+critical-path work automatically: its comp column inflates, CEFT maps the
+path elsewhere, and the dispatch follows the path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Sequence
+
+import numpy as np
+
+from ..core.ceft import CeftResult
+from ..core.ceft_jax import plan_request_dag, plan_request_dags
+from ..core.machine import Machine
+from ..sched.straggler import EwmaCostTable, StragglerMonitor
+from .engine import ServeConfig
+from .queue import AdmissionQueue, Request
+
+
+@dataclasses.dataclass
+class EngineSlot:
+    """One pool member: anything with ``generate(prompts, ServeConfig)``,
+    pinned to a sharding profile (real Engines re-enter it per trace)."""
+    name: str
+    engine: object
+    profile: str
+
+
+@dataclasses.dataclass
+class Dispatch:
+    engine: int                  # slot index == CEFT processor class
+    requests: list[Request]
+    wclass: tuple[int, int]
+    on_critical_path: bool
+    node_prefill: int            # this class's vertex ids in the planned DAG
+    node_decode: int
+
+
+def router_machine(P: int, *, kv_bw: float = 1e4, latency: float = 1e-3) -> Machine:
+    """The pool as a CEFT machine: one class per engine (count 1), uniform
+    KV-handoff bandwidth (tokens/s) and dispatch latency between engines."""
+    return Machine(
+        L=np.full(P, latency, np.float64),
+        bw=np.full((P, P), kv_bw, np.float64),
+        counts=np.ones(P, np.int64),
+    )
+
+
+class Router:
+    """Owns the engine pool, the admission queue, and the cost model; turns
+    each tick's pending requests into CEFT-planned dispatches."""
+
+    def __init__(self, slots: Sequence[EngineSlot], *, machine: Machine | None = None,
+                 queue: AdmissionQueue | None = None, alpha: float = 0.3,
+                 default_rate: float = 1e-3, max_batch: int = 8,
+                 latency_slack: float = 1.0, straggler_threshold: float = 1.3):
+        if not slots:
+            raise ValueError("router needs at least one engine slot")
+        self.slots = list(slots)
+        P = len(self.slots)
+        self.machine = machine if machine is not None else router_machine(P)
+        if self.machine.P != P:
+            raise ValueError(f"machine has {self.machine.P} classes for {P} slots")
+        self.queue = queue if queue is not None else AdmissionQueue()
+        self.costs = EwmaCostTable(P, alpha=alpha, default=default_rate)
+        self.monitor = StragglerMonitor(P, threshold=straggler_threshold)
+        self.max_batch = int(max_batch)
+        self.latency_slack = float(latency_slack)
+        self._slow = np.ones(P)
+        self.stats = {"plans": 0, "batched_plans": 0, "dispatches": 0,
+                      "coalesced": 0, "split": 0, "shed": 0, "ticks": 0}
+        self.last_plan: CeftResult | None = None
+        self.last_nominal: CeftResult | None = None
+        self.last_dag: tuple | None = None
+        self.last_groups: list | None = None
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: Request) -> bool:
+        return self.queue.submit(req)
+
+    # ------------------------------------------------------------ cost model
+    def observe(self, engine: int, wclass: tuple[int, int], seconds: float,
+                tokens: int) -> None:
+        """Fold one measured dispatch into the EWMA table as a per-token rate."""
+        self.costs.update(wclass, engine, seconds / max(tokens, 1))
+
+    def observe_step(self, engine_times: np.ndarray) -> np.ndarray:
+        """Per-engine health signal (e.g. step times) through the straggler
+        monitor; the returned slowdown factors (>= 1) scale the cost table's
+        engine columns on every subsequent plan, so a degraded engine sheds
+        critical-path work."""
+        self._slow = self.monitor.observe(np.asarray(engine_times, np.float64))
+        return self._slow
+
+    # --------------------------------------------------------------- planning
+    def build_dag(self, groups: list[tuple[tuple[int, int], list[Request]]]):
+        """The pending batch as a task DAG: per class one prefill (vertex i)
+        -> decode (vertex G+i) chain, edge data = the class's prompt-token
+        volume (the KV handoff volume if the decode lands elsewhere), comp
+        from the EWMA per-token rates x token volumes, columns scaled by the
+        monitor's slowdown factors.
+
+        Token volumes are *bucket-sized* (wclass bound x request count), not
+        exact sums: the class is the task, and bucketing keeps the DAG
+        content identical across ticks with the same class mix + counts, so
+        the one-slot request-graph cache actually hits on real traffic
+        (exact per-tick prompt sums would miss it every tick)."""
+        G = len(groups)
+        src = np.arange(G, dtype=np.int32)
+        dst = src + G
+        rates = self.costs.comp_matrix([wc for wc, _ in groups],
+                                       scale=self._slow)
+        data = np.zeros(G, np.float64)
+        comp = np.zeros((2 * G, self.machine.P), np.float64)
+        for i, (wc, reqs) in enumerate(groups):
+            data[i] = float(wc[0] * len(reqs))
+            comp[i] = rates[i] * data[i]
+            comp[G + i] = rates[i] * float(wc[1] * len(reqs))
+        return 2 * G, src, dst, data, comp
+
+    def _plan(self, n, src, dst, data, comp):
+        """One CSR-family sweep; scenario-batched (degraded + nominal planes
+        in one vmapped dispatch) while any engine trips the monitor, so the
+        shed critical-path work is observable against the nominal plan."""
+        degraded_mode = bool((self._slow >= self.monitor.threshold).any())
+        if degraded_mode:
+            nominal = comp / self._slow[None, :]
+            m = self.machine
+            Ls = np.repeat(np.asarray(m.L, np.float32)[None], 2, 0)
+            bws = np.repeat(np.asarray(m.bw, np.float32)[None], 2, 0)
+            res, nom = plan_request_dags(
+                n, src, dst, data, np.stack([comp, nominal]), Ls, bws)
+            self.stats["batched_plans"] += 1
+            self.stats["shed"] += sum(
+                1 for t, p in res.path if nom.assignment.get(t, p) != p)
+        else:
+            res, nom = plan_request_dag(n, src, dst, data, comp, self.machine), None
+        self.stats["plans"] += 1
+        self.last_plan, self.last_nominal = res, nom
+        return res
+
+    # --------------------------------------------------------------- the tick
+    def tick(self) -> list[Dispatch]:
+        """Drain, plan, and form micro-batches; returns the dispatch list
+        (execution is separate -- see run_dispatch / serve)."""
+        reqs = self.queue.drain()
+        self.stats["ticks"] += 1
+        if not reqs:
+            return []
+        by_class: dict[tuple[int, int], list[Request]] = {}
+        for r in reqs:
+            by_class.setdefault(r.wclass, []).append(r)
+        groups = sorted(by_class.items())          # deterministic class order
+        n, src, dst, data, comp = self.build_dag(groups)
+        self.last_dag = (n, src, dst, data, comp)
+        self.last_groups = groups
+        res = self._plan(n, src, dst, data, comp)
+        assign = res.assignment                    # critical path's own mapping
+        G = len(groups)
+        # the ceft_cpop split, serving-side: critical-path classes are pinned
+        # to the path's own engine; everything else takes its earliest-finish
+        # class *given the load already placed this tick* (pure argmin over
+        # res.ceft would pile every tied class onto engine 0)
+        load = np.zeros(self.machine.P)
+        chosen: dict[int, tuple[int, bool]] = {}
+        on_path = [i for i in range(G) if i in assign or G + i in assign]
+        for i in on_path + [i for i in range(G) if i not in on_path]:
+            pre, dec = i, G + i
+            if i in on_path:                       # shed to the path's class
+                cls = int(assign.get(dec, assign.get(pre, 0)))
+            else:                                  # earliest finish incl. load
+                cls = int(np.argmin(res.ceft[dec] + load))
+            chosen[i] = (cls, i in on_path)
+            load[cls] += comp[pre, cls] + comp[dec, cls]
+        out: list[Dispatch] = []
+        for i, (wc, rs) in enumerate(groups):
+            pre, dec = i, G + i
+            cls, on_cp = chosen[i]
+            # micro-batch formation: coalesce class-mates while the batch's
+            # estimated service time stays within latency_slack x the CEFT
+            # path length -- growing past that would make the batch itself
+            # the critical path, trading throughput for unbounded latency
+            rate = float((self.costs.row(wc) * self._slow)[cls])
+            per_req = max(rate * (wc[0] + wc[1]), 1e-12)
+            bound = max(1, int(self.latency_slack * res.cpl / per_req))
+            size = max(1, min(self.max_batch, bound))
+            # micro-batches hold one *exact* prompt length each: the engines
+            # have no padding mask, so mixing lengths inside one generate()
+            # would condition shorter requests on filler tokens
+            by_len: dict[int, list[Request]] = {}
+            for r in rs:
+                by_len.setdefault(int(r.prompt.shape[0]), []).append(r)
+            chunks: list[list[Request]] = []
+            for _, rl in sorted(by_len.items()):
+                if size < len(rl):      # the latency bound itself partitioned
+                    self.stats["split"] += 1
+                chunks.extend(rl[k:k + size] for k in range(0, len(rl), size))
+            for chunk in chunks:
+                self.stats["dispatches"] += 1
+                self.stats["coalesced"] += len(chunk) - 1
+                out.append(Dispatch(int(cls), chunk, wc, on_cp, pre, dec))
+        return out
+
+    # -------------------------------------------------------------- execution
+    def run_dispatch(self, d: Dispatch) -> dict[int, np.ndarray]:
+        """Execute one micro-batch on its planned engine, feed the measured
+        per-token rate back into the cost table, return {rid: tokens}."""
+        lens = {int(r.prompt.shape[0]) for r in d.requests}
+        if len(lens) != 1:
+            # no padding mask in the engines: filler tokens would corrupt the
+            # shorter requests' generations (tick() never mixes lengths)
+            raise ValueError(f"micro-batch mixes prompt lengths {sorted(lens)}")
+        prompts = np.stack([r.prompt for r in d.requests]).astype(np.int32)
+        plen = prompts.shape[1]
+        max_new = max(int(r.max_new) for r in d.requests)
+        slot = self.slots[d.engine]
+        t0 = time.perf_counter()
+        toks = slot.engine.generate(prompts, ServeConfig(max_new_tokens=max_new))
+        dt = time.perf_counter() - t0
+        # the engine generates the batch max_new for every row; charge the
+        # rate for the work actually done and trim each row to its own budget
+        self.observe(d.engine, d.wclass, dt, len(d.requests) * (plen + max_new))
+        toks = np.asarray(toks)
+        return {r.rid: toks[b, : plen + int(r.max_new)]
+                for b, r in enumerate(d.requests)}
+
+    def serve(self, max_ticks: int = 64) -> dict[int, np.ndarray]:
+        """Tick until the queue is empty (or max_ticks): the launcher's loop.
+
+        Each tick's micro-batches execute on one worker thread *per engine*
+        (each engine runs its own dispatches in planned order): the CEFT
+        makespan assumes the processor classes work in parallel, and the
+        scoped-profile substrate makes concurrent engine traces safe."""
+        done: dict[int, np.ndarray] = {}
+        lock = threading.Lock()
+        errors: list[BaseException] = []
+        for _ in range(max_ticks):
+            if not len(self.queue):
+                break
+            per_engine: dict[int, list[Dispatch]] = {}
+            for d in self.tick():
+                per_engine.setdefault(d.engine, []).append(d)
+
+            def worker(ds: list[Dispatch]):
+                try:
+                    for d in ds:
+                        out = self.run_dispatch(d)
+                        with lock:
+                            done.update(out)
+                except BaseException as e:  # surfaced after join, not lost
+                    with lock:
+                        errors.append(e)
+
+            threads = [threading.Thread(target=worker, args=(ds,))
+                       for ds in per_engine.values()]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if errors:
+                # a dead engine must fail the serve loop loudly -- silently
+                # returning a partial result dict would pass smoke runs
+                raise errors[0]
+        return done

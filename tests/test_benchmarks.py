@@ -129,6 +129,21 @@ def test_throughput_json_rows_cover_new_impls_and_deep_graphs():
     assert {"jax_vmap8", "jax_csr_vmap8"} <= impls
 
 
+def test_serve_router_bench_emits_gated_rows():
+    """The router bench's planning rows land in the trajectory file under a
+    jax_csr-prefixed impl, so the committed check_regression gate (--impl
+    jax_csr) covers serving-tier planning regressions too."""
+    from benchmarks import serve_router
+    from benchmarks.check_regression import check
+    rows: list = []
+    out = _capture(serve_router.run, json_rows=rows)
+    assert any("serve_router" in l for l in out[1:])
+    assert rows and all(r["bench"] == "serve_router" for r in rows)
+    assert all(r["impl"].startswith("jax_csr") for r in rows)
+    traj = {"schema": 1, "scale": 0.02, "rows": rows}
+    assert check(traj, traj) == []       # matched by the default gate impl
+
+
 def test_summarize_roundtrip(tmp_path):
     from benchmarks import table3, summarize
     buf = io.StringIO()

@@ -209,6 +209,29 @@ def test_fused_superstep_equivalence_single_level():
     assert (res.pred_task == -1).all()
 
 
+def test_superstep_fns_keyed_by_backend(monkeypatch):
+    """Regression (ISSUE 5): ``jax.default_backend()`` was read once when the
+    jitted super-step closures were first built, so a backend selected
+    afterwards (tests forcing CPU, a GPU coming up mid-process) inherited the
+    wrong donation policy.  The cache must key by backend and re-read it per
+    call."""
+    import jax
+
+    from repro.core import ceft_jax as cj
+
+    cur = jax.default_backend()
+    fns_cur = cj._superstep_fns(cj.xla_edge_relax)
+    assert fns_cur["donate"] == (() if cur == "cpu" else (0, 1, 2))
+    # a different backend becoming default gets fresh closures + donation
+    monkeypatch.setattr(cj.jax, "default_backend", lambda: "faketpu")
+    fns_tpu = cj._superstep_fns(cj.xla_edge_relax)
+    assert fns_tpu is not fns_cur
+    assert fns_tpu["donate"] == (0, 1, 2)
+    # switching back re-serves the original backend's cached entry
+    monkeypatch.setattr(cj.jax, "default_backend", lambda: cur)
+    assert cj._superstep_fns(cj.xla_edge_relax) is fns_cur
+
+
 def test_fusion_reduces_dispatch_count_on_deep_chain():
     """A 64-level chain used to dispatch one jitted step per level from
     Python; fused same-bucket super-steps collapse it to O(1) scanned

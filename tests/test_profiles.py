@@ -148,3 +148,57 @@ def test_every_declared_profile_resolves():
         prof = resolve_profile(name)
         spec = resolve_spec((256, 4096), ("batch", "ffn"), MS, profile=prof)
         assert len(spec) == 2
+
+
+def test_profile_names_derive_from_registry():
+    """Launcher --profile choices come from the registry (ISSUE 5): the
+    helper must track PROFILES exactly, so a new profile shows up in every
+    CLI without touching the launchers."""
+    from repro.models.common import profile_names
+    assert profile_names() == sorted(PROFILES)
+    assert "serve" in profile_names() and "baseline" in profile_names()
+
+
+def test_router_tenants_resolve_own_profiles_concurrently():
+    """Two tenants served through the router from two threads, each micro-
+    batch on an engine pinned to a different profile, both *mid-trace at the
+    same time*: each trace must resolve its own profile (the thread-
+    regression pattern, extended through the router's dispatch path)."""
+    import numpy as np
+
+    from repro.serve import Dispatch, EngineSlot, Request, Router
+
+    cfg = C.get("granite-3-8b", smoke=True)
+    barrier = threading.Barrier(2, timeout=60)
+    seen: dict[str, str] = {}
+    errors: list[str] = []
+
+    class RecordingEngine(Engine):
+        def _generate(self, prompts, scfg=None):
+            seen[self.profile.name] = active_profile().name
+            barrier.wait()  # both engines are inside their trace scope now
+            return super()._generate(prompts, scfg)
+
+    slots = [EngineSlot(f"eng-{p}", RecordingEngine(cfg, profile=p), p)
+             for p in ("serve", "baseline")]
+    router = Router(slots)
+    rng = np.random.default_rng(0)
+
+    def drive(idx, tenant):
+        try:
+            req = Request(tenant, rng.integers(2, cfg.vocab, 8).astype(np.int32), 2)
+            d = Dispatch(engine=idx, requests=[req], wclass=req.wclass,
+                         on_critical_path=False, node_prefill=0, node_decode=1)
+            out = router.run_dispatch(d)
+            assert out[req.rid].shape[0] >= 9
+        except Exception as e:  # pragma: no cover
+            errors.append(f"{tenant}: {e!r}")
+
+    threads = [threading.Thread(target=drive, args=(i, t))
+               for i, t in enumerate(("tenantA", "tenantB"))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120)
+    assert not errors, errors
+    assert seen == {"serve": "serve", "baseline": "baseline"}

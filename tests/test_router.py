@@ -1,0 +1,384 @@
+"""CEFT-routed serving front-end (ISSUE 5): admission queue semantics,
+deterministic dispatch on fake engines, dispatch decisions driven by the
+ceft_jax_csr family (trace/dispatch-count + bit-identity to the unbatched
+dense reference on the router's own request DAGs), the one-slot request-graph
+cache, and straggler-driven critical-path shedding."""
+import numpy as np
+import pytest
+
+from repro.core import ceft
+from repro.core.ceft_jax import (
+    CSR_TRACES,
+    _GRAPH_STATE,
+    ceft_jax,
+    plan_request_dag,
+    plan_request_dags,
+    request_graph,
+)
+from repro.serve import (
+    AdmissionQueue,
+    Dispatch,
+    EngineSlot,
+    Request,
+    Router,
+    workload_class,
+)
+
+
+class FakeEngine:
+    """Pool member that records calls and returns deterministic tokens."""
+
+    def __init__(self):
+        self.calls: list[tuple[int, int, int]] = []
+
+    def generate(self, prompts, scfg):
+        B, P = prompts.shape
+        self.calls.append((B, P, scfg.max_new_tokens))
+        return np.full((B, P + scfg.max_new_tokens), 7, np.int32)
+
+
+def _mk_router(P=2, **kw):
+    slots = [EngineSlot(f"e{i}", FakeEngine(), "baseline") for i in range(P)]
+    return Router(slots, **kw), slots
+
+
+def _submit_mixed(router, rng, per_class=4, classes=(8, 16), max_new=4):
+    for t, plen in enumerate(classes):
+        for _ in range(per_class):
+            prompt = rng.integers(2, 100, plen).astype(np.int32)
+            assert router.submit(Request(f"t{t}", prompt, max_new))
+
+
+# ------------------------------------------------------------------- queue
+def test_workload_class_buckets_pow2():
+    assert workload_class(1, 1) == (1, 1)
+    assert workload_class(8, 4) == (8, 4)
+    assert workload_class(9, 5) == (16, 8)
+
+
+def test_admission_queue_bounds_and_fairness():
+    q = AdmissionQueue(max_pending=6, per_tenant=3)
+    reqs = {t: [Request(t, np.zeros(4, np.int32), 2) for _ in range(4)]
+            for t in ("a", "b")}
+    admitted = [q.submit(r) for t in ("a", "b") for r in reqs[t]]
+    # per-tenant cap = 3: the 4th of each tenant is rejected
+    assert admitted == [True] * 3 + [False] + [True] * 3 + [False]
+    assert q.rejected == 2 and len(q) == 6
+    drained = q.drain()
+    # round-robin interleave: a, b, a, b, ... not a's backlog first
+    assert [r.tenant for r in drained] == ["a", "b", "a", "b", "a", "b"]
+    assert len(q) == 0 and q.drain() == []
+
+
+def test_admission_queue_global_bound():
+    q = AdmissionQueue(max_pending=2, per_tenant=64)
+    assert q.submit(Request("a", np.zeros(2, np.int32), 1))
+    assert q.submit(Request("b", np.zeros(2, np.int32), 1))
+    assert not q.submit(Request("c", np.zeros(2, np.int32), 1))
+    assert len(q.drain(limit=1)) == 1 and len(q) == 1
+
+
+# ----------------------------------------------------------- deterministic smoke
+def test_router_smoke_deterministic():
+    """Same submissions -> identical dispatch decisions, every request served
+    exactly once, outputs shaped per request."""
+    seqs = []
+    for _ in range(2):
+        router, slots = _mk_router(P=2)
+        rng = np.random.default_rng(0)
+        _submit_mixed(router, rng)
+        dispatches = router.tick()
+        seqs.append([(d.engine, d.wclass, len(d.requests), d.on_critical_path)
+                     for d in dispatches])
+        done = {}
+        for d in dispatches:
+            done.update(router.run_dispatch(d))
+        assert len(done) == 8        # every request served exactly once
+        for d in dispatches:
+            for r in d.requests:
+                assert done[r.rid].shape[0] >= r.prompt.shape[0] + 1
+        # both engines got work (load-aware EFT, not all-on-engine-0)
+        used = {d.engine for d in dispatches}
+        assert used == {0, 1}
+    assert seqs[0] == seqs[1]
+
+
+# ------------------------------------------- CSR-driven dispatch + bit-identity
+def test_dispatch_decisions_driven_by_csr_sweeps(monkeypatch):
+    """Acceptance: every dispatch descends from a ceft_jax_csr-family sweep
+    -- one plan per non-empty tick (dispatch-count), critical-path dispatches
+    follow the plan's own task->engine mapping, and repeated same-shape ticks
+    stay inside the already-compiled trace set."""
+    import repro.serve.router as R
+
+    calls = {"single": 0, "batched": 0}
+    real_single, real_batched = R.plan_request_dag, R.plan_request_dags
+
+    def spy_single(*a, **k):
+        calls["single"] += 1
+        return real_single(*a, **k)
+
+    def spy_batched(*a, **k):
+        calls["batched"] += 1
+        return real_batched(*a, **k)
+
+    monkeypatch.setattr(R, "plan_request_dag", spy_single)
+    monkeypatch.setattr(R, "plan_request_dags", spy_batched)
+
+    router, _ = _mk_router(P=2)
+    rng = np.random.default_rng(1)
+    _submit_mixed(router, rng)
+    first = router.tick()
+    assert calls["single"] + calls["batched"] == 1
+    assert first, "non-empty queue must produce dispatches"
+    res = router.last_plan
+    for d in first:
+        if d.on_critical_path:
+            assert d.engine == res.assignment.get(
+                d.node_decode, res.assignment.get(d.node_prefill))
+    # empty tick: no plan, no dispatch
+    assert router.tick() == [] and calls["single"] + calls["batched"] == 1
+    # same-shape ticks replan (fresh sweep per tick) without new compilation
+    traces_before = dict(CSR_TRACES)
+    for k in range(2, 5):
+        _submit_mixed(router, rng)
+        router.tick()
+        assert calls["single"] + calls["batched"] == k
+    assert set(CSR_TRACES) == set(traces_before), \
+        "same-shape router ticks must not compile new traces"
+
+
+def test_router_dag_plan_bit_identical_to_unbatched_reference():
+    """Acceptance: on the router's own request DAGs the CSR plan is
+    bit-identical to the unbatched dense sweep (values, predecessors, path)
+    and the batched form matches the unbatched CSR form."""
+    router, _ = _mk_router(P=3)
+    rng = np.random.default_rng(2)
+    # heterogeneous observed rates -> non-trivial comp planes
+    for wc in ((8, 4), (16, 4), (32, 4)):
+        for e in range(3):
+            router.costs.update(wc, e, float(rng.uniform(0.5e-3, 3e-3)))
+    _submit_mixed(router, rng, per_class=3, classes=(8, 16, 32))
+    router.tick()
+    n, src, dst, data, comp = router.last_dag
+    res_csr = plan_request_dag(n, src, dst, data, comp, router.machine)
+    ref = ceft_jax(request_graph(n, src, dst, data), comp, router.machine)
+    assert np.array_equal(res_csr.ceft, ref.ceft)
+    assert np.array_equal(res_csr.pred_task, ref.pred_task)
+    assert np.array_equal(res_csr.pred_proc, ref.pred_proc)
+    assert res_csr.path == ref.path and res_csr.cpl == ref.cpl
+    # batched (the degraded-scenario form) == unbatched CSR, plane by plane
+    m = router.machine
+    planes = np.stack([comp, comp * 1.7])
+    Ls = np.repeat(np.asarray(m.L, np.float32)[None], 2, 0)
+    bws = np.repeat(np.asarray(m.bw, np.float32)[None], 2, 0)
+    batched = plan_request_dags(n, src, dst, data, planes, Ls, bws)
+    for b, plane in enumerate(planes):
+        single = plan_request_dag(n, src, dst, data, plane, m)
+        assert np.array_equal(batched[b].ceft, single.ceft)
+        assert batched[b].path == single.path
+    # and the float64 numpy CEFT agrees on path + cpl
+    f64 = ceft(request_graph(n, src, dst, data), comp, router.machine)
+    assert f64.path == res_csr.path
+    assert res_csr.cpl == pytest.approx(f64.cpl, rel=1e-5)
+
+
+def test_request_graph_one_slot_cache():
+    """Structurally-equal edge arrays -> the SAME TaskGraph object, so the
+    identity-keyed device cache (fused segment tables) hits across ticks."""
+    src = np.asarray([0, 1], np.int32)
+    dst = np.asarray([2, 3], np.int32)
+    data = np.asarray([8.0, 16.0])
+    g1 = request_graph(4, src, dst, data)
+    g2 = request_graph(4, src.copy(), dst.copy(), data.copy())
+    assert g1 is g2
+    comp = np.ones((4, 2))
+    plan_request_dag(4, src, dst, data, comp, _mk_router(P=2)[0].machine)
+    assert _GRAPH_STATE["entry"][0] is g1, \
+        "request-DAG planning must populate the one-slot graph-state cache"
+    # different structure -> different graph (no false sharing)
+    g3 = request_graph(4, src, dst, np.asarray([8.0, 17.0]))
+    assert g3 is not g1
+
+
+# ------------------------------------------------------------- straggler tie-in
+def test_degraded_engine_sheds_critical_path_work():
+    """Feeding StragglerMonitor observations back into the cost table moves
+    the planned critical path off the degraded engine (batched nominal +
+    degraded scenario planning)."""
+    router, slots = _mk_router(P=2)
+    rng = np.random.default_rng(3)
+    # engine 0 measured consistently faster: the path lands on engine 0
+    for wc in ((8, 4), (16, 4)):
+        router.costs.update(wc, 0, 1e-3)
+        router.costs.update(wc, 1, 2e-3)
+    _submit_mixed(router, rng)
+    router.tick()
+    assert set(dict(router.last_plan.path).values()) == {0}
+    assert router.stats["batched_plans"] == 0
+
+    # healthy baseline, then engine 0 degrades 5x past the monitor threshold
+    router.observe_step(np.asarray([1.0, 1.0]))
+    for _ in range(10):
+        router.observe_step(np.asarray([5.0, 1.0]))
+    assert router._slow[0] >= router.monitor.threshold
+    _submit_mixed(router, rng)
+    dispatches = router.tick()
+    assert router.stats["batched_plans"] == 1     # nominal + degraded planes
+    assert router.stats["shed"] > 0               # path moved off engine 0
+    assert set(dict(router.last_plan.path).values()) == {1}
+    assert set(dict(router.last_nominal.path).values()) == {0}
+    for d in dispatches:
+        if d.on_critical_path:
+            assert d.engine == 1
+
+
+def test_latency_bound_splits_oversized_microbatches():
+    """Coalescing is bounded by the CEFT path length: a class whose batch
+    would exceed the bound splits, one whose batch fits coalesces."""
+    router, _ = _mk_router(P=2, max_batch=64, latency_slack=1.0)
+    rng = np.random.default_rng(4)
+    # class (8,4) is 40x cheaper per token on both engines than (16,4):
+    # the (16,4) chain is the critical path, and the cheap class's requests
+    # all fit under it; shrink latency_slack to force a split instead
+    for e in range(2):
+        router.costs.update((8, 4), e, 1e-4)
+        router.costs.update((16, 4), e, 4e-3)
+    _submit_mixed(router, rng, per_class=8)
+    dispatches = router.tick()
+    cheap = [d for d in dispatches if d.wclass == (8, 4)]
+    assert len(cheap) == 1 and len(cheap[0].requests) == 8   # coalesced
+    assert router.stats["coalesced"] >= 7
+
+    router2, _ = _mk_router(P=2, max_batch=64, latency_slack=0.01)
+    for e in range(2):
+        router2.costs.update((8, 4), e, 1e-4)
+        router2.costs.update((16, 4), e, 4e-3)
+    _submit_mixed(router2, rng, per_class=8)
+    dispatches2 = router2.tick()
+    cheap2 = [d for d in dispatches2 if d.wclass == (8, 4)]
+    assert len(cheap2) > 1                                   # bound forced a split
+    assert router2.stats["split"] >= 1
+
+
+def test_microbatches_never_mix_prompt_lengths():
+    """Engines have no padding mask: requests sharing a workload class but
+    differing in exact prompt length must land in separate micro-batches
+    (a mixed batch would condition the shorter prompts on filler tokens)."""
+    router, _ = _mk_router(P=2)
+    rng = np.random.default_rng(6)
+    for plen in (9, 12, 16):        # all bucket to workload class (16, 4)
+        assert router.submit(
+            Request("t0", rng.integers(2, 100, plen).astype(np.int32), 4))
+    dispatches = router.tick()
+    assert {d.wclass for d in dispatches} == {(16, 4)}
+    assert len(dispatches) == 3     # one per exact length
+    for d in dispatches:
+        assert len({int(r.prompt.shape[0]) for r in d.requests}) == 1
+        router.run_dispatch(d)      # executes cleanly
+    # a hand-built mixed batch is rejected loudly instead of padding
+    bad = Dispatch(engine=0, requests=[
+        Request("t0", np.full(9, 3, np.int32), 4),
+        Request("t0", np.full(16, 3, np.int32), 4)],
+        wclass=(16, 4), on_critical_path=False, node_prefill=0, node_decode=1)
+    with pytest.raises(ValueError, match="mixes prompt lengths"):
+        router.run_dispatch(bad)
+
+
+def test_steady_state_ticks_hit_request_graph_cache():
+    """Bucketed DAG volumes: ticks with the same class mix + counts but
+    different exact prompt lengths produce byte-identical DAGs, so the
+    one-slot request-graph cache hits (no per-tick segment rebuild)."""
+    router, _ = _mk_router(P=2)
+    rng = np.random.default_rng(7)
+    for plen in (9, 11):            # tick 1: two requests in class (16, 4)
+        router.submit(Request("t0", rng.integers(2, 100, plen).astype(np.int32), 4))
+    router.tick()
+    g1 = request_graph(*router.last_dag[:4])
+    for plen in (13, 16):           # tick 2: same mix, different exact lens
+        router.submit(Request("t0", rng.integers(2, 100, plen).astype(np.int32), 4))
+    router.tick()
+    assert request_graph(*router.last_dag[:4]) is g1
+
+
+def test_admission_queue_drops_empty_tenants():
+    """Ephemeral tenants must not leak dict entries after drain."""
+    q = AdmissionQueue()
+    for t in range(50):
+        q.submit(Request(f"ephemeral{t}", np.zeros(4, np.int32), 2))
+    assert len(q.drain()) == 50
+    assert len(q._pending) == 0
+
+
+def test_serve_runs_engines_in_parallel():
+    """serve() executes each engine's micro-batches on its own worker thread
+    (the CEFT makespan assumes parallel processor classes)."""
+    import threading as th
+
+    barrier = th.Barrier(2, timeout=30)
+
+    class MeetingEngine:
+        def generate(self, prompts, scfg):
+            barrier.wait()  # deadlocks unless both engines run concurrently
+            B, P = prompts.shape
+            return np.zeros((B, P + scfg.max_new_tokens), np.int32)
+
+    slots = [EngineSlot(f"e{i}", MeetingEngine(), "baseline") for i in range(2)]
+    router = Router(slots)
+    # separate classes with rates steering one class per engine
+    router.costs.update((8, 4), 0, 1e-3)
+    router.costs.update((8, 4), 1, 2e-3)
+    router.costs.update((16, 4), 0, 2e-3)
+    router.costs.update((16, 4), 1, 1e-3)
+    rng = np.random.default_rng(8)
+    _submit_mixed(router, rng, per_class=2)
+    done = router.serve(max_ticks=1)
+    assert len(done) == 4
+
+
+def test_serve_surfaces_engine_failures():
+    """A dying engine must fail serve() loudly, not silently return a
+    partial result dict (which would pass smoke runs)."""
+    class DeadEngine:
+        def generate(self, prompts, scfg):
+            raise RuntimeError("engine down")
+
+    router = Router([EngineSlot("e0", DeadEngine(), "baseline")])
+    router.submit(Request("t0", np.full(8, 3, np.int32), 2))
+    with pytest.raises(RuntimeError, match="engine down"):
+        router.serve(max_ticks=1)
+
+
+def test_run_dispatch_trims_rows_to_request_budget():
+    """Coalesced requests with different max_new: each returned row is cut to
+    its own prompt+max_new budget, not the batch maximum."""
+    router, _ = _mk_router(P=1)
+    r1 = Request("t0", np.full(8, 3, np.int32), 3)
+    r2 = Request("t0", np.full(8, 3, np.int32), 4)   # same class (8, 4)
+    assert r1.wclass == r2.wclass
+    router.submit(r1)
+    router.submit(r2)
+    (d,) = router.tick()
+    out = router.run_dispatch(d)
+    assert out[r1.rid].shape[0] == 8 + 3
+    assert out[r2.rid].shape[0] == 8 + 4
+
+
+def test_rejected_submit_leaks_no_tenant_entry():
+    q = AdmissionQueue(max_pending=1, per_tenant=1)
+    assert q.submit(Request("a", np.zeros(2, np.int32), 1))
+    for t in range(20):
+        assert not q.submit(Request(f"flood{t}", np.zeros(2, np.int32), 1))
+    assert list(q._pending) == ["a"] and q.rejected == 20
+
+
+def test_run_dispatch_updates_cost_table():
+    router, slots = _mk_router(P=2)
+    rng = np.random.default_rng(5)
+    _submit_mixed(router, rng, per_class=2, classes=(8,))
+    (d,) = router.tick()
+    assert router.costs._rows == {}
+    router.run_dispatch(d)
+    row = router.costs.row(d.wclass)
+    assert np.isfinite(row).all() and row[d.engine] > 0
+    assert slots[d.engine].engine.calls, "dispatch must hit the planned engine"
