@@ -8,7 +8,9 @@ benches).  Each prints CSV to stdout; `python -m benchmarks.run` runs all.
 --json mirrors the CEFT-throughput CSV rows into a machine-readable perf
 trajectory file (schema: {"schema", "scale", "rows": [{impl, n, P, e, ms,
 speedup, ...}]}) so future perf PRs have a baseline to diff against; CI
-refreshes it on every pass (scripts/ci.sh).
+refreshes it on every pass (scripts/ci.sh).  The serve_router suite also
+mirrors its gated per-tick rows (jax_csr_router, jax_csr_router_steady) and
+the identity-unchecked heft_router context row.
 """
 import argparse
 import json

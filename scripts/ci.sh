@@ -106,6 +106,22 @@ if [ -n "$violations" ]; then
 fi
 echo "ci: bucket-policy choke-point invariant holds"
 
+# Plan-cache ownership (ISSUE 6): the graph store, the device-state store
+# and the old ceft_jax one-slot caches (_GRAPH_STATE / _REQUEST_GRAPH) are
+# owned by sched/plancache.py alone.  Nothing else in src/ or benchmarks/
+# may hold segment-table or built-graph caching state -- the invalidation
+# invariant (a cost delta may only skip work, never change the schedule)
+# is only auditable while the cached state has a single owner.
+echo "ci: forbidden-API grep (plan/graph caching state outside sched/plancache.py)"
+violations=$(grep -rnE "_GRAPH_STATE|_REQUEST_GRAPH|_GRAPH_STORE|_DEVICE_STATE" \
+    src/ benchmarks/ --include='*.py' | grep -v "^src/repro/sched/plancache.py:" || true)
+if [ -n "$violations" ]; then
+    echo "ci: FAIL -- plan/graph caching state outside src/repro/sched/plancache.py:"
+    echo "$violations"
+    exit 1
+fi
+echo "ci: plan-cache ownership invariant holds"
+
 echo "ci: tier-1 tests"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 

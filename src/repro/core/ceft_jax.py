@@ -45,8 +45,6 @@ from .ceft import CeftResult, _finalize
 from .machine import Machine
 from .taskgraph import (
     TaskGraph,
-    from_edge_arrays,
-    csr_batch_segments,
     csr_level_segments,
     fuse_levels,
     fuse_levels_dense,
@@ -354,7 +352,7 @@ def _dense_superstep_init_impl(
     )
 
 
-def _superstep_fns(relax: Callable):
+def _superstep_fns(relax: Callable, keep: bool = False):
     """Module-level cached jitted super-steps for one edge relax_fn, keyed
     (batched, layout, masked, with_init) with layout in {"seg", "dense"}.
     Dense-layout runs always use the XLA dense relax (a custom ``relax``
@@ -362,17 +360,27 @@ def _superstep_fns(relax: Callable):
     the DP table then updates in place; on CPU donation is unsupported and
     each donated call pays a fallback copy, so it is disabled there.
 
+    ``keep=True`` selects non-donating variants even off-CPU: a sweep that
+    snapshots its per-run carries for later resume (the plan cache's dirty-
+    frontier path) must not hand those snapshots to a donating dispatch, or
+    the cached buffers would be invalidated in place.  On CPU donation is
+    already off, so keep is normalized away and the same compiled closures
+    serve both paths (no extra traces).
+
     The backend is read per *call*, not once at closure-build time: the cache
-    is keyed (relax, backend), so a backend selected after the first sweep
-    (tests forcing CPU, a GPU picked up mid-process) gets its own jitted
-    closures with the right donation policy instead of inheriting whichever
-    backend happened to be default first (ISSUE 5 regression)."""
-    return _superstep_fns_for(relax, jax.default_backend())
+    is keyed (relax, backend, keep), so a backend selected after the first
+    sweep (tests forcing CPU, a GPU picked up mid-process) gets its own
+    jitted closures with the right donation policy instead of inheriting
+    whichever backend happened to be default first (ISSUE 5 regression)."""
+    backend = jax.default_backend()
+    if backend == "cpu":
+        keep = False  # donation already disabled: one closure set for both
+    return _superstep_fns_for(relax, backend, keep)
 
 
 @functools.lru_cache(maxsize=None)
-def _superstep_fns_for(relax: Callable, backend: str):
-    donate = () if backend == "cpu" else (0, 1, 2)
+def _superstep_fns_for(relax: Callable, backend: str, keep: bool = False):
+    donate = () if (backend == "cpu" or keep) else (0, 1, 2)
     fns = {}
     for batched in (False, True):
         tag = "csr_batch" if batched else "csr"
@@ -452,8 +460,10 @@ def _fused_runs(g: TaskGraph, segs=None):
     heavy tails) keep the segment layout (``fuse_levels``).  All shape axes
     use the √2 ``_geo_bucket`` grid and run lengths are padded with no-op
     levels, so neither depth nor exact widths leak into the jit key.
-    Returns (runs, v_b) with runs a level-ordered list of FusedLevelRun /
-    FusedDenseRun."""
+    Returns (runs, v_b, spans) with runs a level-ordered list of
+    FusedLevelRun / FusedDenseRun and spans the aligned [lo, hi) level range
+    of each run (level 0, the folded init, belongs to no run) — the dirty
+    frontier of an incremental re-sweep resolves to a run through spans."""
     if segs is None:
         segs = csr_level_segments(g)
     v_b = _geo_bucket(g.n)
@@ -501,14 +511,17 @@ def _fused_runs(g: TaskGraph, segs=None):
                     pad_run=_geo_bucket, run_ids=run_ids)
     )
     runs = []
+    spans = []
     for lay in layouts:
         if lay[0] == "dense":
             _, lo, hi, W_b, D_b = lay
             runs.append(fuse_levels_dense(
                 segs, lo, hi, W_b, D_b, pad_run=_geo_bucket))
         else:
+            _, lo, hi = lay
             runs.append(next(seg_runs))
-    return runs, v_b
+        spans.append((lo, hi))
+    return runs, v_b, tuple(spans)
 
 
 def _device_runs(runs):
@@ -544,25 +557,25 @@ def _padded_sources(g: TaskGraph, v_b: int) -> np.ndarray:
     return out
 
 
-# one-slot cache for the graph-derived device state: TaskGraph is frozen /
-# immutable and the re-planning loops (straggler, benchmarks) sweep the same
-# graph object repeatedly -- a miss only costs the rebuild (a content-equal
-# rebuilt graph produces identical tables, so identity keying cannot go
-# stale).  The whole entry lives under ONE key as an immutable tuple: reads
-# capture it with a single reference load, so a concurrent sweep of another
-# graph can replace the slot but never hand a caller torn state.
-_GRAPH_STATE: dict = {}
+def _build_device_state(g: TaskGraph, segs=None):
+    """Uncached build of a graph's device-side sweep state: (device runs,
+    padded sources, v_b, run level spans).  The *store* for this state lives
+    in :mod:`repro.sched.plancache` (the unified plan cache, PR 6); this
+    module only knows how to build it — callers go through
+    :func:`_graph_device_state` so repeated sweeps of one graph hit the
+    cache."""
+    fused, v_b, spans = _fused_runs(g, segs=segs)
+    runs = _device_runs(fused)
+    srcs = jnp.asarray(_padded_sources(g, v_b))
+    return runs, srcs, v_b, spans
 
 
 def _graph_device_state(g: TaskGraph, segs=None):
-    """(device runs, padded sources, v_b) for one graph, identity-cached."""
-    entry = _GRAPH_STATE.get("entry")
-    if entry is not None and entry[0] is g:
-        return entry[1], entry[2], entry[3]
-    fused, v_b = _fused_runs(g, segs=segs)
-    runs = _device_runs(fused)
-    srcs = jnp.asarray(_padded_sources(g, v_b))
-    _GRAPH_STATE["entry"] = (g, runs, srcs, v_b)
+    """(device runs, padded sources, v_b) for one graph — a thin view over
+    the plan cache's identity-keyed device-state store."""
+    from ..sched import plancache
+
+    runs, srcs, v_b, _spans = plancache.device_state(g, segs=segs)
     return runs, srcs, v_b
 
 
@@ -589,7 +602,11 @@ def csr_device_inputs(g: TaskGraph, comp: np.ndarray, m: Machine, dtype=jnp.floa
     )
 
 
-def csr_sweep(inputs, *, relax: Callable = xla_edge_relax):
+def csr_sweep(
+    inputs, *, relax: Callable = xla_edge_relax,
+    keep_carries: list | None = None,
+    resume: tuple | None = None,
+):
     """Run the fused CSR sweep over prebuilt :func:`csr_device_inputs`
     (which carries everything the sweep needs -- no graph/cost re-reads, so
     stale-argument mismatches are impossible by construction).
@@ -599,11 +616,33 @@ def csr_sweep(inputs, *, relax: Callable = xla_edge_relax):
     donates its carry buffers (the DP table is updated in place on device).
     Returns the *padded* (v_b+1, P) device arrays (ceft, pred_task,
     pred_proc); rows >= g.n are scratch — slice after the host transfer
-    (slicing on device would add a per-call dispatch per output)."""
+    (slicing on device would add a per-call dispatch per output).
+
+    Incremental re-sweep hooks (the plan cache's dirty-frontier path):
+
+    * ``keep_carries`` — a list the sweep appends each executed run's output
+      carry to.  The carry after run r-1 depends only on comp rows of levels
+      below run r (levels are longest-path depth, so each vertex is written
+      exactly once, in its own run), which is what makes run-granular resume
+      bit-identical to a full sweep.
+    * ``resume=(start, carry)`` — skip runs ``< start`` and continue from the
+      snapshot ``carry`` (the keep_carries entry for run start-1) with the
+      *current* comp_pad.  Rows for vertices in runs >= start are unwritten
+      init state in the snapshot and are fully recomputed, so the result is
+      bit-identical to a from-scratch sweep.  The caller guarantees no
+      changed comp row lies below run start (level 0 or run 0 dirty => full
+      sweep, there is no cheaper prefix to keep).
+
+    Either hook switches to the non-donating keep fns so snapshots are never
+    invalidated in place; the resumed runs reuse the exact per-run tables (and
+    thus the exact ``_geo_bucket``-bucketed shapes) of the full sweep, so no
+    new jit traces are minted by resuming."""
     runs, comp_pad, srcs_pad, L, bw, v_b = inputs
-    fns = _superstep_fns(relax)
-    carry = None
-    for layout, *arrs in runs:
+    keep = keep_carries is not None or resume is not None
+    fns = _superstep_fns(relax, keep=keep)
+    start, carry = resume if resume is not None else (0, None)
+    for r in range(start, len(runs)):
+        layout, *arrs = runs[r]
         masked = arrs.pop() if layout == "seg" else False
         if carry is None:  # level-0 init folded into the first dispatch
             carry = fns[(False, layout, masked, True)](
@@ -613,6 +652,8 @@ def csr_sweep(inputs, *, relax: Callable = xla_edge_relax):
             carry = fns[(False, layout, masked, False)](
                 *carry, comp_pad, *arrs, L, bw
             )
+        if keep_carries is not None:
+            keep_carries.append(carry)
     if carry is None:  # single-level graph: no relaxation levels at all
         carry = _csr_init(comp_pad, srcs_pad)
     return carry
@@ -645,15 +686,11 @@ def csr_batch_device_inputs(g: TaskGraph, comps, Ls, bws, dtype=jnp.float32):
 
     Returns (runs, comp_pad (B, v_b+1, P), srcs_pad, Ls (B, P),
     bws (B, P, P), v_b)."""
-    entry = _GRAPH_STATE.get("entry")
-    if entry is not None and entry[0] is g:
-        # hot re-planning path (same graph object): skip rebuilding the
-        # shared segments entirely, only the cost planes change
-        comps = stack_cost_planes(g, comps)
-        runs, srcs_pad, v_b = entry[1], entry[2], entry[3]
-    else:
-        segs, comps = csr_batch_segments(g, comps)
-        runs, srcs_pad, v_b = _graph_device_state(g, segs=segs)
+    # hot re-planning path (same graph object): the plan cache's identity-
+    # keyed device-state store makes the shared-segment rebuild a hit, only
+    # the cost planes change per call
+    comps = stack_cost_planes(g, comps)
+    runs, srcs_pad, v_b = _graph_device_state(g)
     B, v, P = comps.shape
     comp_pad = np.zeros((B, v_b + 1, P), np.float32)
     comp_pad[:, :v] = comps
@@ -728,32 +765,19 @@ def ceft_batch_csr_results(
 
 
 # ------------------------------------------------------ in-memory request DAGs
-# one-slot *content*-keyed graph cache for online planners (the serving
-# router, re-planning ticks) that rebuild their DAG from edge arrays every
-# tick: structurally-equal arrays map to the SAME TaskGraph object, so the
-# identity-keyed _GRAPH_STATE slot above hits and the fused segment tables
-# are not rebuilt per tick.  Same torn-state-free discipline as _GRAPH_STATE:
-# the whole entry lives under one key as an immutable tuple.
-_REQUEST_GRAPH: dict = {}
-
-
 def request_graph(n: int, src, dst, data) -> TaskGraph:
-    """TaskGraph for an in-memory request DAG, one-slot content cache.
+    """TaskGraph for an in-memory request DAG — a thin view over the plan
+    cache's content-keyed graph store: structurally-equal edge arrays map to
+    the SAME TaskGraph object, so the identity-keyed device-state store hits
+    and the fused segment tables are not rebuilt per tick.
 
     ``src``/``dst`` must already be topological (src < dst), the natural
     shape for prefill->decode chains.  A steady-state router whose pending
     mix keeps the same DAG structure across ticks pays the host-side
     segment/fusion build exactly once."""
-    src = np.ascontiguousarray(src, np.int32)
-    dst = np.ascontiguousarray(dst, np.int32)
-    data = np.ascontiguousarray(data, np.float64)
-    key = (int(n), src.tobytes(), dst.tobytes(), data.tobytes())
-    entry = _REQUEST_GRAPH.get("entry")
-    if entry is not None and entry[0] == key:
-        return entry[1]
-    g = from_edge_arrays(n, src, dst, data)
-    _REQUEST_GRAPH["entry"] = (key, g)
-    return g
+    from ..sched import plancache
+
+    return plancache.graph_for(n, src, dst, data)
 
 
 def plan_request_dag(

@@ -117,6 +117,26 @@ class TaskGraph:
         return from_edge_arrays(n, src, dst, dat), vsrc, vsink
 
 
+def graph_fingerprint(g: TaskGraph) -> bytes:
+    """Content digest of a graph's structure and edge weights.
+
+    Two graphs with equal fingerprints are interchangeable for every level
+    table / segment structure this module builds (the children CSR determines
+    the graph completely; the parent CSR and levels are derived from it).
+    Used by the plan cache (repro.sched.plancache) to key plans by *value*,
+    so a rebuilt-but-equal graph hits instead of re-sweeping.
+    """
+    import hashlib
+
+    h = hashlib.sha1()
+    h.update(np.int64(g.n).tobytes())
+    for a in (g.cindptr, g.cindices, g.cdata):
+        a = np.ascontiguousarray(a)
+        h.update(a.dtype.str.encode())
+        h.update(a.tobytes())
+    return h.digest()
+
+
 def _csr_ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
     """Flat indices [starts[i] .. starts[i]+counts[i]) concatenated (the
     vectorized multi-row CSR gather)."""

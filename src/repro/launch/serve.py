@@ -51,7 +51,9 @@ def run_router(args) -> None:
     for tenant in sorted(counts):
         print(f"router: {tenant}: {counts[tenant]} completed")
     s = router.stats
-    print(f"router: plans={s['plans']} (batched={s['batched_plans']}) "
+    print(f"router: plans={s['plans']} (degraded={s['degraded_plans']}) "
+          f"cache_hits={s['cache_hits']} partial_sweeps={s['partial_sweeps']} "
+          f"invalidations={s['invalidations']} "
           f"dispatches={s['dispatches']} coalesced={s['coalesced']} "
           f"split={s['split']} shed={s['shed']}")
     if router.last_plan is not None:

@@ -1,7 +1,9 @@
 """repro.sched — the paper's algorithm as the runtime's scheduling brain."""
 from .layer_dag import DEFAULT_FLEET, DeviceClass, build_layer_dag, fleet_machine
 from .partitioner import PipelinePlan, Stage, plan_pipeline
+from .plancache import PlanCache, PlanEntry
 from .straggler import EwmaCostTable, StragglerEvent, StragglerMonitor
 __all__ = ["DEFAULT_FLEET", "DeviceClass", "EwmaCostTable", "PipelinePlan",
-           "Stage", "StragglerEvent", "StragglerMonitor", "build_layer_dag",
-           "fleet_machine", "plan_pipeline"]
+           "PlanCache", "PlanEntry", "Stage", "StragglerEvent",
+           "StragglerMonitor", "build_layer_dag", "fleet_machine",
+           "plan_pipeline"]

@@ -6,23 +6,22 @@ homogeneous at launch becomes heterogeneous when a slice degrades (thermal
 throttling, a flaky ICI link, a preempted host).  CEFT's class-view cost model
 absorbs the measurement directly (scale the class's comp column), and the
 re-planned CEFT-CPOP schedule routes critical-path work away from the slow
-class.  The re-planning sweeps run on the *batched CSR* formulation
-(``ceft_jax_batch_csr``: shared segment tables, vmapped cost planes), so each
-re-plan costs O(e·P²) device work — the paper's §5 bound — instead of the
-padded dense sweep's O(levels·W·D·P²).
+class.  The re-planning sweeps route through the unified plan cache
+(``repro.sched.plancache``): fused CSR sweeps at O(e·P²) device work — the
+paper's §5 bound — with quiet steps served as pure cache hits and changed
+cost planes re-swept from their dirty frontier only.
 """
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import threading
 
 import numpy as np
 
 from ..core import ceft_cpop
-from ..core.ceft_jax import ceft_batch_csr_results
 from ..core.machine import Machine
 from ..core.taskgraph import TaskGraph
+from .plancache import PlanCache
 
 
 @dataclasses.dataclass
@@ -59,6 +58,15 @@ class EwmaCostTable:
         self.default = float(default)
         self._rows: dict = {}
         self._lock = threading.Lock()
+        self._listeners: list = []
+
+    def add_listener(self, fn) -> None:
+        """Register ``fn(key, cls)`` to run after every :meth:`update` — the
+        plan cache's invalidation hook (a cost delta dirties exactly the
+        plans whose DAG contains ``key``).  Listeners run OUTSIDE the table
+        lock: they take their own locks (the plan cache's), and nesting
+        foreign locks under this one invites ordering deadlocks."""
+        self._listeners.append(fn)
 
     def update(self, key, cls: int, value: float) -> None:
         with self._lock:
@@ -67,6 +75,8 @@ class EwmaCostTable:
                 row = self._rows[key] = np.full(self.n_classes, np.nan)
             row[cls] = (value if np.isnan(row[cls])
                         else self.alpha * value + (1 - self.alpha) * row[cls])
+        for fn in self._listeners:
+            fn(key, cls)
 
     def row(self, key) -> np.ndarray:
         """The (n_classes,) cost row for ``key``, NaN-free (see class doc)."""
@@ -85,38 +95,33 @@ class EwmaCostTable:
         return out
 
 
-def _content_key(g: TaskGraph, comp: np.ndarray, m: Machine) -> str:
-    """Content hash of a (graph, costs, machine) planning problem.
-
-    Keys the nominal-schedule cache by *value*, not object identity: a graph
-    or cost array that is rebuilt between steps (same edges, fresh object —
-    e.g. a re-built layer DAG) must still hit the cache.
-    """
-    h = hashlib.sha1()
-    for a in (g.cindptr, g.cindices, g.cdata, comp, m.L, m.bw, m.counts):
-        a = np.ascontiguousarray(a)
-        h.update(a.dtype.str.encode())
-        h.update(np.asarray(a.shape, np.int64).tobytes())
-        h.update(a.tobytes())
-    return h.hexdigest()
-
-
 class StragglerMonitor:
     """EWMA per device class; replan when a class drifts > threshold."""
 
-    def __init__(self, n_classes: int, alpha: float = 0.2, threshold: float = 1.3):
+    def __init__(self, n_classes: int, alpha: float = 0.2, threshold: float = 1.3,
+                 plancache: PlanCache | None = None):
         self.alpha = alpha
         self.threshold = threshold
         self.ewma = np.ones(n_classes) * np.nan
         self.baseline = np.ones(n_classes) * np.nan
         self.events: list[StragglerEvent] = []
-        # nominal-schedule cache: the baseline CEFT-CPOP depends only on
-        # (graph, comp, machine), not on the triggering event -- recomputing it
-        # per event doubled the replan cost.  Keyed by content hash
-        # (_content_key) so re-built but equal inputs hit the cache and
-        # in-place mutation of comp / m.L / m.bw cannot serve a stale baseline.
-        self._nominal_key: str | None = None
+        # nominal-schedule caching is a thin view over the unified plan cache
+        # (repro.sched.plancache): swept plans are content-keyed there by
+        # (graph, cost plane, machine) value, so re-built but equal inputs
+        # hit and in-place mutation of comp / m.L / m.bw cannot serve a
+        # stale baseline (plan() byte-compares the stored plane).  The
+        # CEFT-CPOP mapping is memoized on the plan entry (entry.derived),
+        # which plan() resets whenever the plane actually changed.
+        self.plancache = plancache if plancache is not None else PlanCache()
         self._nominal_sched = None
+
+    def _cpop(self, g: TaskGraph, comp: np.ndarray, m: Machine, *, slot: str):
+        """Swept plan + memoized CEFT-CPOP mapping through the plan cache."""
+        res, _status, entry = self.plancache.plan(g, comp, m, slot=slot)
+        sched = entry.derived.get("cpop")
+        if sched is None:
+            sched = entry.derived["cpop"] = ceft_cpop(g, comp, m, res)
+        return sched
 
     def observe(self, class_times: np.ndarray) -> np.ndarray:
         """Update EWMAs; returns per-class slowdown factors (>= 1)."""
@@ -133,43 +138,22 @@ class StragglerMonitor:
         any class trips the threshold; otherwise schedules with nominal costs
         (the cached nominal schedule, computed on first call).
 
-        Both the degraded sweep and (when the cache is cold) the nominal
-        baseline sweep go through one batched CSR dispatch sequence: the
-        segment tables are shared, only the cost planes differ.
+        Both the nominal baseline and the degraded scenario go through the
+        unified plan cache: the graph's device-side segment tables are built
+        once, a quiet step with unchanged costs is a pure cache hit (zero
+        sweeps), and a changed plane re-sweeps only from its dirty frontier.
         """
         slow = self.observe(class_times)
-        # content-hashed on every call, including quiet steps: an identity
-        # memo would be cheaper but could serve a stale baseline after
-        # in-place mutation of comp / m.L / m.bw (the guarantee _content_key
-        # exists for); the planning arrays are KB-scale, so the hash is
-        # microseconds against a training step
-        key = _content_key(g, comp, m)
         if (slow < self.threshold).all():
             # Below threshold the docstring always promised the *nominal*
-            # schedule, but this path returned (None, None) and never warmed
-            # the nominal cache -- the first straggler event then paid for
-            # both sweeps at the worst moment (ISSUE 5 regression fix).
-            if key != self._nominal_key:
-                results = ceft_batch_csr_results(
-                    g, np.asarray(comp, np.float32)[None],
-                    np.asarray(m.L, np.float32)[None],
-                    np.asarray(m.bw, np.float32)[None])
-                self._nominal_sched = ceft_cpop(g, comp, m, results[0])
-                self._nominal_key = key
+            # schedule, but this path once returned (None, None) and never
+            # warmed the nominal cache -- the first straggler event then paid
+            # for both sweeps at the worst moment (ISSUE 5 regression fix).
+            self._nominal_sched = self._cpop(g, comp, m, slot="nominal")
             return self._nominal_sched, None
+        base = self._nominal_sched = self._cpop(g, comp, m, slot="nominal")
         degraded = comp * slow[None, :]
-        planes = [degraded]
-        if key != self._nominal_key:
-            planes.append(comp)
-        B = len(planes)
-        Ls = np.repeat(np.asarray(m.L, np.float32)[None], B, 0)
-        bws = np.repeat(np.asarray(m.bw, np.float32)[None], B, 0)
-        results = ceft_batch_csr_results(g, np.stack(planes), Ls, bws)
-        if key != self._nominal_key:
-            self._nominal_sched = ceft_cpop(g, comp, m, results[1])
-            self._nominal_key = key
-        base = self._nominal_sched
-        new = ceft_cpop(g, degraded, m, results[0])
+        new = self._cpop(g, degraded, m, slot="degraded")
         worst = int(np.argmax(slow))
         ev = StragglerEvent(step, worst, float(slow[worst]),
                             float(base.makespan), float(new.makespan))

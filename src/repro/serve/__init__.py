@@ -1,5 +1,6 @@
 from .engine import Engine, ServeConfig
-from .queue import AdmissionQueue, Request, workload_class
+from .queue import AdmissionQueue, Request, class_mix, workload_class
 from .router import Dispatch, EngineSlot, Router, router_machine
 __all__ = ["AdmissionQueue", "Dispatch", "Engine", "EngineSlot", "Request",
-           "Router", "ServeConfig", "router_machine", "workload_class"]
+           "Router", "ServeConfig", "class_mix", "router_machine",
+           "workload_class"]

@@ -33,6 +33,17 @@ def workload_class(prompt_len: int, max_new: int) -> tuple[int, int]:
     return (_pow2ceil(prompt_len), _pow2ceil(max_new))
 
 
+def class_mix(resident: dict) -> tuple:
+    """Deterministic (wclass, count) signature of a pending mix.
+
+    The router's steady-state short-circuit key: two ticks with equal mixes
+    build byte-identical request DAGs and cost planes, so a clean cached plan
+    can be served without touching the planner at all.  Counts are exact, not
+    bucketed — serving a plan priced for a different request count would
+    break the plan-cache invariant (cached == from-scratch)."""
+    return tuple(sorted((wc, len(q)) for wc, q in resident.items()))
+
+
 @dataclasses.dataclass
 class Request:
     tenant: str

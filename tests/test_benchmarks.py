@@ -139,7 +139,18 @@ def test_serve_router_bench_emits_gated_rows():
     out = _capture(serve_router.run, json_rows=rows)
     assert any("serve_router" in l for l in out[1:])
     assert rows and all(r["bench"] == "serve_router" for r in rows)
-    assert all(r["impl"].startswith("jax_csr") for r in rows)
+    gated = [r for r in rows if r["impl"].startswith("jax_csr")]
+    context = [r for r in rows if not r["impl"].startswith("jax_csr")]
+    assert {"jax_csr_router", "jax_csr_router_steady"} <= {
+        r["impl"] for r in gated}
+    # steady-state rows at both resident scales (flatness asserted in-bench)
+    assert {r["graph"] for r in rows
+            if r["impl"] == "jax_csr_router_steady"} == {"res1x", "res8x"}
+    # the classic-HEFT context row stays OUTSIDE the gate prefix and is
+    # flagged identity-unchecked (different algorithm, no bit contract)
+    assert context and all(r["impl"] == "heft_router"
+                           and r.get("identity_checked") is False
+                           for r in context)
     traj = {"schema": 1, "scale": 0.02, "rows": rows}
     assert check(traj, traj) == []       # matched by the default gate impl
 

@@ -202,3 +202,80 @@ def test_router_tenants_resolve_own_profiles_concurrently():
         t.join(120)
     assert not errors, errors
     assert seen == {"serve": "serve", "baseline": "baseline"}
+
+
+def test_router_observe_mid_tick_keeps_plan_cache_coherent():
+    """ISSUE 6 satellite: two engine worker threads feeding observe() cost
+    deltas back while the main thread ticks must not tear the plan cache's
+    reverse index, and the next tick must re-plan (the deltas dirty the
+    cached entry through the reverse index) instead of short-circuiting on
+    the stale plan."""
+    import numpy as np
+
+    from repro.serve import Dispatch, EngineSlot, Request, Router
+
+    cfg = C.get("granite-3-8b", smoke=True)
+    barrier = threading.Barrier(3, timeout=60)
+    errors: list[str] = []
+
+    class RecordingEngine(Engine):
+        def _generate(self, prompts, scfg=None):
+            barrier.wait()  # both workers in-flight; main thread ticks now
+            return super()._generate(prompts, scfg)
+
+    slots = [EngineSlot(f"eng-{p}", RecordingEngine(cfg, profile=p), p)
+             for p in ("serve", "baseline")]
+    router = Router(slots, tick_budget=2)
+    rng = np.random.default_rng(0)
+
+    def _req(tenant, plen):
+        return Request(tenant, rng.integers(2, cfg.vocab, plen).astype(np.int32), 2)
+
+    for plen in (8, 8, 4, 4):  # two workload classes resident
+        router.submit(_req("tenantQ", plen))
+    assert router.tick(), "seed tick produced no dispatches"
+
+    # worker dispatches built up-front (rng is not thread-safe)
+    worker_ds = [
+        Dispatch(engine=i, requests=[_req(f"tenant{i}", plen)],
+                 wclass=(plen, 2), on_critical_path=False,
+                 node_prefill=0, node_decode=1)
+        for i, plen in enumerate((8, 4))
+    ]
+
+    def drive(d):
+        try:
+            out = router.run_dispatch(d)  # observe() fires on completion
+            rid = d.requests[0].rid
+            assert out[rid].shape[0] >= d.wclass[0] + 1
+        except Exception as e:  # pragma: no cover
+            errors.append(f"engine{d.engine}: {e!r}")
+
+    threads = [threading.Thread(target=drive, args=(d,)) for d in worker_ds]
+    for t in threads:
+        t.start()
+    barrier.wait()          # both engines are mid-generate: tick now
+    router.tick()           # drains the 2 residents the seed tick left
+    for t in threads:
+        t.join(120)
+    assert not errors, errors
+    assert router.stats["invalidations"] >= 1, "observe() deltas must land"
+
+    # pin one more delta from this thread (the raced ones may have landed
+    # before the mid-flight tick planned, which would make its cached plan
+    # legitimately current); now the entry is unambiguously dirty
+    router.observe(0, (8, 2), 0.5, 10)
+    # same class mix again: the cached plan is dirty AND its cost plane
+    # changed, so the tick must re-plan, not serve the stale short-circuit
+    for plen in (8, 4):
+        router.submit(_req("tenantR", plen))
+    plans = router.stats["plans"]
+    hits = router.stats["cache_hits"]
+    router.tick()
+    assert router.stats["plans"] == plans + 1
+    assert router.stats["cache_hits"] == hits
+    # reverse index only references live plan keys (no torn state)
+    pc = router.plancache
+    with pc._lock:
+        for keys in pc._by_class.values():
+            assert keys <= set(pc._plans)

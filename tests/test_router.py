@@ -1,20 +1,20 @@
-"""CEFT-routed serving front-end (ISSUE 5): admission queue semantics,
+"""CEFT-routed serving front-end (ISSUE 5 + 6): admission queue semantics,
 deterministic dispatch on fake engines, dispatch decisions driven by the
-ceft_jax_csr family (trace/dispatch-count + bit-identity to the unbatched
-dense reference on the router's own request DAGs), the one-slot request-graph
-cache, and straggler-driven critical-path shedding."""
+plan cache (sweep-count + bit-identity to the unbatched dense reference on
+the router's own request DAGs), steady-state cache-hit ticks, and
+straggler-driven critical-path shedding."""
 import numpy as np
 import pytest
 
 from repro.core import ceft
 from repro.core.ceft_jax import (
     CSR_TRACES,
-    _GRAPH_STATE,
     ceft_jax,
     plan_request_dag,
     plan_request_dags,
     request_graph,
 )
+from repro.sched import plancache as PC
 from repro.serve import (
     AdmissionQueue,
     Dispatch,
@@ -104,32 +104,18 @@ def test_router_smoke_deterministic():
 
 
 # ------------------------------------------- CSR-driven dispatch + bit-identity
-def test_dispatch_decisions_driven_by_csr_sweeps(monkeypatch):
-    """Acceptance: every dispatch descends from a ceft_jax_csr-family sweep
-    -- one plan per non-empty tick (dispatch-count), critical-path dispatches
-    follow the plan's own task->engine mapping, and repeated same-shape ticks
-    stay inside the already-compiled trace set."""
-    import repro.serve.router as R
-
-    calls = {"single": 0, "batched": 0}
-    real_single, real_batched = R.plan_request_dag, R.plan_request_dags
-
-    def spy_single(*a, **k):
-        calls["single"] += 1
-        return real_single(*a, **k)
-
-    def spy_batched(*a, **k):
-        calls["batched"] += 1
-        return real_batched(*a, **k)
-
-    monkeypatch.setattr(R, "plan_request_dag", spy_single)
-    monkeypatch.setattr(R, "plan_request_dags", spy_batched)
-
+def test_dispatch_decisions_driven_by_csr_sweeps():
+    """Acceptance (ISSUE 6): every dispatch descends from a plan-cache sweep
+    -- one full sweep for the first mix, steady-state repeats served from
+    cache with ZERO sweeps, critical-path dispatches follow the plan's own
+    task->engine mapping, cost deltas invalidate and force a replan, and
+    repeated same-shape ticks stay inside the already-compiled trace set."""
     router, _ = _mk_router(P=2)
     rng = np.random.default_rng(1)
     _submit_mixed(router, rng)
     first = router.tick()
-    assert calls["single"] + calls["batched"] == 1
+    assert router.stats["plans"] == 1
+    assert router.plancache.counters["full_sweeps"] >= 1
     assert first, "non-empty queue must produce dispatches"
     res = router.last_plan
     for d in first:
@@ -137,15 +123,26 @@ def test_dispatch_decisions_driven_by_csr_sweeps(monkeypatch):
             assert d.engine == res.assignment.get(
                 d.node_decode, res.assignment.get(d.node_prefill))
     # empty tick: no plan, no dispatch
-    assert router.tick() == [] and calls["single"] + calls["batched"] == 1
-    # same-shape ticks replan (fresh sweep per tick) without new compilation
+    assert router.tick() == [] and router.stats["plans"] == 1
+    # steady state: same-mix ticks are cache hits -- no sweeps, no compiles
     traces_before = dict(CSR_TRACES)
-    for k in range(2, 5):
+    sweeps_before = router.plancache.snapshot()
+    for k in range(1, 4):
         _submit_mixed(router, rng)
-        router.tick()
-        assert calls["single"] + calls["batched"] == k
+        assert router.tick(), "same mix must still dispatch"
+        assert router.stats["cache_hits"] == k
+    sweeps_after = router.plancache.snapshot()
+    assert sweeps_after["full_sweeps"] == sweeps_before["full_sweeps"]
+    assert sweeps_after["partial_sweeps"] == sweeps_before["partial_sweeps"]
     assert set(CSR_TRACES) == set(traces_before), \
-        "same-shape router ticks must not compile new traces"
+        "steady-state router ticks must not compile new traces"
+    # a measured cost delta dirties the cached plan via the reverse index:
+    # the very next tick must replan instead of serving the stale schedule
+    router.observe(0, (8, 4), 0.004, 100)
+    assert router.stats["invalidations"] >= 1
+    _submit_mixed(router, rng)
+    router.tick()
+    assert router.stats["plans"] == 2
 
 
 def test_router_dag_plan_bit_identical_to_unbatched_reference():
@@ -183,9 +180,10 @@ def test_router_dag_plan_bit_identical_to_unbatched_reference():
     assert res_csr.cpl == pytest.approx(f64.cpl, rel=1e-5)
 
 
-def test_request_graph_one_slot_cache():
-    """Structurally-equal edge arrays -> the SAME TaskGraph object, so the
-    identity-keyed device cache (fused segment tables) hits across ticks."""
+def test_request_graph_content_store():
+    """Structurally-equal edge arrays -> the SAME TaskGraph object (the plan
+    cache's content-keyed graph store), so the identity-keyed device-state
+    store (fused segment tables) hits across ticks."""
     src = np.asarray([0, 1], np.int32)
     dst = np.asarray([2, 3], np.int32)
     data = np.asarray([8.0, 16.0])
@@ -194,8 +192,8 @@ def test_request_graph_one_slot_cache():
     assert g1 is g2
     comp = np.ones((4, 2))
     plan_request_dag(4, src, dst, data, comp, _mk_router(P=2)[0].machine)
-    assert _GRAPH_STATE["entry"][0] is g1, \
-        "request-DAG planning must populate the one-slot graph-state cache"
+    assert id(g1) in PC._DEVICE_STATE, \
+        "request-DAG planning must populate the device-state store"
     # different structure -> different graph (no false sharing)
     g3 = request_graph(4, src, dst, np.asarray([8.0, 17.0]))
     assert g3 is not g1
@@ -204,8 +202,8 @@ def test_request_graph_one_slot_cache():
 # ------------------------------------------------------------- straggler tie-in
 def test_degraded_engine_sheds_critical_path_work():
     """Feeding StragglerMonitor observations back into the cost table moves
-    the planned critical path off the degraded engine (batched nominal +
-    degraded scenario planning)."""
+    the planned critical path off the degraded engine (nominal + degraded
+    scenario planes through the plan cache's slots)."""
     router, slots = _mk_router(P=2)
     rng = np.random.default_rng(3)
     # engine 0 measured consistently faster: the path lands on engine 0
@@ -215,16 +213,19 @@ def test_degraded_engine_sheds_critical_path_work():
     _submit_mixed(router, rng)
     router.tick()
     assert set(dict(router.last_plan.path).values()) == {0}
-    assert router.stats["batched_plans"] == 0
+    assert router.stats["degraded_plans"] == 0
 
-    # healthy baseline, then engine 0 degrades 5x past the monitor threshold
+    # healthy baseline, then engine 0 degrades 5x past the monitor threshold;
+    # the slowdown deltas must dirty the cached plan (engine-scope
+    # invalidation) so the degraded tick cannot serve the stale schedule
     router.observe_step(np.asarray([1.0, 1.0]))
     for _ in range(10):
         router.observe_step(np.asarray([5.0, 1.0]))
     assert router._slow[0] >= router.monitor.threshold
+    assert router.stats["invalidations"] >= 1
     _submit_mixed(router, rng)
     dispatches = router.tick()
-    assert router.stats["batched_plans"] == 1     # nominal + degraded planes
+    assert router.stats["degraded_plans"] == 1    # nominal + degraded planes
     assert router.stats["shed"] > 0               # path moved off engine 0
     assert set(dict(router.last_plan.path).values()) == {1}
     assert set(dict(router.last_nominal.path).values()) == {0}
@@ -288,17 +289,47 @@ def test_microbatches_never_mix_prompt_lengths():
 def test_steady_state_ticks_hit_request_graph_cache():
     """Bucketed DAG volumes: ticks with the same class mix + counts but
     different exact prompt lengths produce byte-identical DAGs, so the
-    one-slot request-graph cache hits (no per-tick segment rebuild)."""
+    whole second tick is a plan-cache hit (no per-tick segment rebuild, no
+    sweep)."""
     router, _ = _mk_router(P=2)
     rng = np.random.default_rng(7)
     for plen in (9, 11):            # tick 1: two requests in class (16, 4)
         router.submit(Request("t0", rng.integers(2, 100, plen).astype(np.int32), 4))
     router.tick()
     g1 = request_graph(*router.last_dag[:4])
+    sweeps = router.plancache.snapshot()["full_sweeps"]
     for plen in (13, 16):           # tick 2: same mix, different exact lens
         router.submit(Request("t0", rng.integers(2, 100, plen).astype(np.int32), 4))
     router.tick()
     assert request_graph(*router.last_dag[:4]) is g1
+    assert router.stats["cache_hits"] == 1
+    assert router.plancache.snapshot()["full_sweeps"] == sweeps
+
+
+def test_tick_budget_bounds_dispatches_and_keeps_residents():
+    """Incremental admission: a bounded tick dispatches at most tick_budget
+    requests (split round-robin across classes), the remainder stays
+    resident, and steady-state refills at the same mix are cache hits."""
+    router, _ = _mk_router(P=2, tick_budget=2)
+    rng = np.random.default_rng(9)
+    _submit_mixed(router, rng, per_class=4)          # 8 requests, 2 classes
+    d1 = router.tick()
+    assert sum(len(d.requests) for d in d1) == 2
+    # round-robin split: one from each class, not two from the first
+    assert sorted(d.wclass for d in d1) == [(8, 4), (16, 4)]
+    assert router.stats["resident"] == 6
+    # refill exactly what left: the mix signature is restored -> cache hit
+    _submit_mixed(router, rng, per_class=1)
+    d2 = router.tick()
+    assert sum(len(d.requests) for d in d2) == 2
+    assert router.stats["cache_hits"] >= 1
+    # drain the rest without refills: counts shrink, mix changes, replans
+    served = 4
+    for _ in range(8):
+        served += sum(len(d.requests) for d in router.tick())
+        if not router.resident:
+            break
+    assert served == 10 and not router.resident
 
 
 def test_admission_queue_drops_empty_tenants():
@@ -347,6 +378,37 @@ def test_serve_surfaces_engine_failures():
     router.submit(Request("t0", np.full(8, 3, np.int32), 2))
     with pytest.raises(RuntimeError, match="engine down"):
         router.serve(max_ticks=1)
+
+
+def test_serve_aggregates_concurrent_engine_failures():
+    """Two engines dying in the SAME tick must BOTH surface: the old serve()
+    raised only errors[0], silently dropping every concurrent failure."""
+    class DeadEngine:
+        def __init__(self, msg):
+            self.msg = msg
+
+        def generate(self, prompts, scfg):
+            raise RuntimeError(self.msg)
+
+    slots = [EngineSlot(f"e{i}", DeadEngine(f"boom-{i}"), "baseline")
+             for i in range(2)]
+    router = Router(slots)
+    # rates steering one class to each engine, so both threads run and fail
+    router.costs.update((8, 4), 0, 1e-3)
+    router.costs.update((8, 4), 1, 2e-3)
+    router.costs.update((16, 4), 0, 2e-3)
+    router.costs.update((16, 4), 1, 1e-3)
+    rng = np.random.default_rng(10)
+    _submit_mixed(router, rng, per_class=2)
+    with pytest.raises(RuntimeError) as exc_info:
+        router.serve(max_ticks=1)
+    err = exc_info.value
+    assert "2 engines failed concurrently" in str(err)
+    assert "boom-0" in str(err) and "boom-1" in str(err)
+    assert "e0" in str(err) and "e1" in str(err)
+    # the original exceptions ride along with per-engine context
+    assert {name for name, _ in err.failures} == {"e0", "e1"}
+    assert all(isinstance(e, RuntimeError) for _, e in err.failures)
 
 
 def test_run_dispatch_trims_rows_to_request_budget():

@@ -127,40 +127,38 @@ def test_partitioner_prefers_bandwidth_class_for_decode():
     assert {s.device_class for s in dec.stages} == {"v5p-32"}
 
 
-def test_straggler_below_threshold_returns_warm_nominal(monkeypatch):
+def test_straggler_below_threshold_returns_warm_nominal():
     """Regression (ISSUE 5): below threshold maybe_replan returned
     (None, None) and never warmed the nominal cache, despite the docstring's
     'otherwise schedules with nominal costs' -- the first straggler event
     then paid for both sweeps.  It must return the cached nominal schedule
-    (computed on first call) and later events must reuse it."""
+    (computed on first call) and later events must reuse it.  Sweep counts
+    now come from the unified plan cache's counters (ISSUE 6)."""
     from repro.core import from_edges, uniform_machine
-    from repro.sched import straggler as S
 
     g = from_edges(4, [(0, 2, 1.0), (1, 2, 2.0), (2, 3, 1.0)])
     comp = np.asarray([[2.0, 3.0], [1.0, 4.0], [3.0, 2.0], [2.0, 2.0]])
     m = uniform_machine(2, bw=1.0, L=0.1)
 
-    calls = []
-    real = S.ceft_batch_csr_results
-
-    def spy(g_, comps, Ls, bws, **kw):
-        calls.append(np.asarray(comps).shape)
-        return real(g_, comps, Ls, bws, **kw)
-
-    monkeypatch.setattr(S, "ceft_batch_csr_results", spy)
     mon = StragglerMonitor(2, threshold=1.3)
     sched0, ev0 = mon.maybe_replan(1, g, comp, m, np.ones(2))
     assert ev0 is None
     assert sched0 is not None and sched0.makespan > 0
-    assert len(calls) == 1 and calls[0][0] == 1   # one nominal plane swept
+    c = mon.plancache.snapshot()
+    assert c["full_sweeps"] == 1 and c["hits"] == 0   # one nominal sweep
     # second quiet step: cache hit, same schedule object, no new sweep
     sched1, ev1 = mon.maybe_replan(2, g, comp, m, np.ones(2))
-    assert sched1 is sched0 and ev1 is None and len(calls) == 1
-    # a straggler event reuses the warmed nominal: degraded plane only
+    assert sched1 is sched0 and ev1 is None
+    c = mon.plancache.snapshot()
+    assert c["full_sweeps"] == 1 and c["hits"] == 1
+    # a straggler event reuses the warmed nominal: degraded sweep only
     times = np.asarray([3.0, 1.0])
     sched2, ev2 = mon.maybe_replan(3, g, comp, m, times)
-    assert ev2 is not None and len(calls) == 2
-    assert calls[1][0] == 1, "warm nominal cache must not re-plan the baseline"
+    assert ev2 is not None
+    c = mon.plancache.snapshot()
+    assert c["full_sweeps"] == 2, \
+        "warm nominal cache must not re-sweep the baseline"
+    assert c["hits"] == 2       # the event's nominal lookup is a pure hit
     assert ev2.old_makespan == sched0.makespan
 
 
