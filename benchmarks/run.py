@@ -57,9 +57,17 @@ def main() -> None:
               flush=True)
     elif args.json:
         import jax  # record the producing version: the CI gate pins the range
+        from repro.substrate import process_topology
+
+        # where the rows were produced (ISSUE 7): perf numbers are only
+        # comparable on like hardware, so the host/worker topology rides in
+        # the metadata.  The volatile pid is dropped -- the file must not
+        # churn between identical runs on the same box.
+        topo = {k: v for k, v in process_topology().items() if k != "pid"}
         with open(args.json, "w") as f:
             json.dump({"schema": 1, "scale": scale(),
-                       "jax_version": jax.__version__, "rows": json_rows},
+                       "jax_version": jax.__version__, "topology": topo,
+                       "rows": json_rows},
                       f, indent=2)
             f.write("\n")
         print(f"# wrote {len(json_rows)} rows to {args.json}", flush=True)

@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core import ceft, heft
 from repro.core.ceft_jax import ceft_jax
-from repro.serve import EngineSlot, Request, Router
+from repro.serve import EnginePool, EngineSlot, Request, Router, WorkerSpec
 
 from .common import CSV, scale, timed
 
@@ -130,6 +130,7 @@ def run(seed: int = 7, json_rows: list | None = None):
                 "speedup_vs_padded": None, "identity_checked": False,
             })
     _run_steady(csv, seed, per_class, json_rows)
+    _run_scaleout(csv, seed, per_class, json_rows)
 
 
 def _refill(router: Router, ds, rng) -> None:
@@ -185,6 +186,54 @@ def _run_steady(csv: CSV, seed: int, per_class: int,
     assert ms[8] <= 1.25 * ms[1] + 2e-4, (
         f"steady tick is not flat in residents: {ms[1] * 1e3:.3f}ms @1x vs "
         f"{ms[8] * 1e3:.3f}ms @8x")
+
+
+def _run_scaleout(csv: CSV, seed: int, per_class: int,
+                  json_rows: list | None) -> None:
+    """ISSUE 7: per-tick planning latency through the elastic EnginePool at
+    1 vs 4 workers (null engines: pool + routing overhead only).  The
+    4-worker pool is grown FROM the 1-worker pool via launch(), so the row
+    also exercises the scale-out path (column append, cost-table widening,
+    machine-snapshot replacement) rather than a pre-sized pool.  Both rows
+    carry the gated ``jax_csr`` prefix: the pool seam sitting between the
+    router and its workers must not make ticks materially slower as the
+    pool grows."""
+    classes = 4
+    rng = np.random.default_rng(seed)
+    pool = EnginePool([WorkerSpec("w0", engine=_NullEngine())])
+    router = Router(pool, max_batch=8)
+    for workers in (1, 4):
+        while pool.size < workers:
+            pool.launch(WorkerSpec(f"w{pool.size}", engine=_NullEngine()))
+        for c in range(classes):
+            wc = (1 << (3 + c), 8)
+            for e in range(pool.size):
+                router.costs.update(wc, e, float(rng.uniform(0.5e-3, 2e-3)))
+        best = np.inf
+        dispatches = 0
+        for _ in range(15):
+            _submit(router, classes, per_class, rng)
+            t0 = time.perf_counter()
+            ds = router.tick()
+            best = min(best, time.perf_counter() - t0)
+            dispatches = len(ds)
+        n, src, dst, data, comp = router.last_dag
+        # same identity gate as the main rows: the pool-backed router's plan
+        # must equal the dense padded sweep on the same DAG
+        ref = ceft_jax(_graph(n, src, dst, data), comp, router.machine)
+        res = router.last_plan
+        assert np.array_equal(res.ceft, ref.ceft) and res.path == ref.path, \
+            "pool-backed router plan diverged from the dense padded sweep"
+        csv.row("serve_router", f"scaleout{workers}w", n, workers, len(src),
+                "jax_csr_pool_scaleout", f"{best * 1e3:.3f}",
+                f"{1.0 / best:.1f}", dispatches)
+        if json_rows is not None:
+            json_rows.append({
+                "bench": "serve_router", "graph": f"scaleout{workers}w",
+                "impl": "jax_csr_pool_scaleout", "n": int(n), "P": int(workers),
+                "e": int(len(src)), "ms": float(best * 1e3), "speedup": None,
+                "speedup_vs_padded": None,
+            })
 
 
 def _graph(n, src, dst, data):

@@ -122,6 +122,22 @@ if [ -n "$violations" ]; then
 fi
 echo "ci: plan-cache ownership invariant holds"
 
+# Placement-plane ownership (ISSUE 7): worker lifecycle state -- the
+# _WorkerState machine, the subprocess transport/bootstrap, and the pool
+# member list -- is private to serve/pool.py.  The Router (and everything
+# else) sees only the public pool API (launch/drain/mark_lost/generate/
+# machine), so "where computation lives" keeps a single owner and the
+# failure-as-degradation invariant stays auditable.
+echo "ci: forbidden-API grep (worker lifecycle state outside serve/pool.py)"
+violations=$(grep -rnE "_WorkerState|_worker_main|_SubprocWorker|_InprocWorker|_PoolMember|pool\._members" \
+    src/ benchmarks/ --include='*.py' | grep -v "^src/repro/serve/pool.py:" || true)
+if [ -n "$violations" ]; then
+    echo "ci: FAIL -- worker lifecycle state accessed outside src/repro/serve/pool.py:"
+    echo "$violations"
+    exit 1
+fi
+echo "ci: placement-plane ownership invariant holds"
+
 echo "ci: tier-1 tests"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 

@@ -3,13 +3,17 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --batch 4
 
-Router mode (--router): a CEFT-routed multi-tenant front-end over a pool of
-engines pinned to different sharding profiles; each tick the pending
-requests are planned as a task DAG and dispatched along the mapped critical
-path (see repro.serve.router).
+Router mode (--router): a CEFT-routed multi-tenant front-end over an elastic
+engine pool (repro.serve.pool); each tick the pending requests are planned
+as a task DAG and dispatched along the mapped critical path (see
+repro.serve.router).  --pool-size replicates the profile list up to N
+workers, --backend subprocess puts each worker in its own process with a
+measured comm plane, --autoscale lets the pool grow/drain with queue depth.
 
   PYTHONPATH=src python -m repro.launch.serve --router --tenants 2 \
       --pool serve,baseline --requests 4 --max-new 4
+  PYTHONPATH=src python -m repro.launch.serve --router --pool-size 4 \
+      --autoscale --backend subprocess --requests 8
 """
 import argparse
 
@@ -17,19 +21,43 @@ import numpy as np
 
 from .. import configs as C
 from ..models.common import profile_names
-from ..serve import Engine, EngineSlot, Request, Router, ServeConfig
+from ..serve import (
+    Engine,
+    EnginePool,
+    Request,
+    Router,
+    ServeConfig,
+    WorkerSpec,
+)
 
 
 def run_router(args) -> None:
-    pool = [p.strip() for p in args.pool.split(",") if p.strip()]
-    unknown = [p for p in pool if p not in profile_names()]
+    profiles = [p.strip() for p in args.pool.split(",") if p.strip()]
+    unknown = [p for p in profiles if p not in profile_names()]
     if unknown:
         raise SystemExit(f"unknown pool profile(s) {unknown}; "
                          f"known: {profile_names()}")
+    # --pool-size N replicates the profile list round-robin up to N workers
+    size = args.pool_size if args.pool_size else len(profiles)
+    profiles = [profiles[i % len(profiles)] for i in range(size)]
     cfg = C.get(args.arch, smoke=True)
-    slots = [EngineSlot(f"{args.arch}:{p}#{i}", Engine(cfg, profile=p), p)
-             for i, p in enumerate(pool)]
-    router = Router(slots, max_batch=args.batch)
+    if args.backend == "subprocess":
+        specs = [WorkerSpec(f"{args.arch}:{p}#{i}", profile=p,
+                            factory="repro.serve.pool:smoke_engine_factory",
+                            args=(args.arch, p), backend="subprocess")
+                 for i, p in enumerate(profiles)]
+    else:
+        specs = [WorkerSpec(f"{args.arch}:{p}#{i}", profile=p,
+                            engine=Engine(cfg, profile=p))
+                 for i, p in enumerate(profiles)]
+    pool = EnginePool(
+        specs,
+        probe="measure" if args.backend == "subprocess" else "static",
+        autoscale=args.autoscale, max_size=max(size, args.max_pool_size),
+        high_water=args.batch)
+    if pool.probe != "static":
+        pool.refresh_probes()
+    router = Router(pool, max_batch=args.batch)
     rng = np.random.default_rng(0)
     # tenant i leans to its own prompt-length bucket -> a mixed-class DAG
     tenant_of: dict[int, str] = {}
@@ -42,9 +70,19 @@ def run_router(args) -> None:
                 tenant_of[req.rid] = req.tenant
             else:
                 print(f"tenant{t}: request rejected (admission control)")
-    done = router.serve()
-    print(f"router: {len(done)} requests served on {len(slots)} engines "
-          f"({', '.join(s.name for s in slots)})")
+    try:
+        done = router.serve()
+    finally:
+        pool.close()
+    names = ", ".join(s.name for s in router.slots)
+    print(f"router: {len(done)} requests served on {pool.size} workers "
+          f"({names}) backend={args.backend}")
+    for name, err in router.failures:
+        print(f"router: WORKER LOST {name}: {err}")
+    p = pool.stats
+    print(f"router: pool launched={p['launched']} lost={p['lost']} "
+          f"drained={p['drained']} probes={p['probes']} "
+          f"scale_out={p['scale_out']} scale_in={p['scale_in']}")
     counts: dict[str, int] = {}
     for rid in done:
         counts[tenant_of[rid]] = counts.get(tenant_of[rid], 0) + 1
@@ -78,6 +116,17 @@ def main():
                     help="router mode: requests per tenant")
     ap.add_argument("--pool", default="serve,baseline",
                     help="router mode: comma-separated profiles, one engine each")
+    ap.add_argument("--pool-size", type=int, default=0,
+                    help="router mode: replicate the profile list round-robin "
+                         "up to N workers (0 = one per listed profile)")
+    ap.add_argument("--backend", choices=("inproc", "subprocess"),
+                    default="inproc",
+                    help="router mode: worker backend; subprocess workers get "
+                         "a measured comm plane (probed transfer rates)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="router mode: scale the pool out/in with queue depth")
+    ap.add_argument("--max-pool-size", type=int, default=8,
+                    help="router mode: autoscale ceiling")
     args = ap.parse_args()
 
     if args.router:

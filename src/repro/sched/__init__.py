@@ -2,8 +2,9 @@
 from .layer_dag import DEFAULT_FLEET, DeviceClass, build_layer_dag, fleet_machine
 from .partitioner import PipelinePlan, Stage, plan_pipeline
 from .plancache import PlanCache, PlanEntry
-from .straggler import EwmaCostTable, StragglerEvent, StragglerMonitor
-__all__ = ["DEFAULT_FLEET", "DeviceClass", "EwmaCostTable", "PipelinePlan",
+from .straggler import (LOST_SLOWDOWN, EwmaCostTable, StragglerEvent,
+                        StragglerMonitor)
+__all__ = ["DEFAULT_FLEET", "DeviceClass", "EwmaCostTable", "LOST_SLOWDOWN", "PipelinePlan",
            "PlanCache", "PlanEntry", "Stage", "StragglerEvent",
            "StragglerMonitor", "build_layer_dag", "fleet_machine",
            "plan_pipeline"]

@@ -254,7 +254,8 @@ class PlanCache:
                     del self._by_class[c]
 
     # ---------------------------------------------------------- invalidation
-    def invalidate(self, *, wclass=None, engine: int | None = None) -> int:
+    def invalidate(self, *, wclass=None, engine: int | None = None,
+                   machine_fp: bytes | None = None) -> int:
         """Mark affected plans dirty; returns how many flipped clean->dirty.
 
         ``wclass`` scopes through the reverse index to plans whose DAG
@@ -262,12 +263,19 @@ class PlanCache:
         containment, not path membership): a cost delta on an off-path class
         can MOVE the critical path, so only plans that cannot see the class
         at all may stay clean.  ``engine`` deltas (straggler slowdowns)
-        rescale a whole comp column and dirty every plan.  Advisory either
-        way: :meth:`plan` re-verifies bytes before serving anything.
+        rescale a whole comp column and dirty every plan.  ``machine_fp``
+        scopes to plans swept over one machine snapshot — the engine pool's
+        hook for a measured comm-plane delta: plans keyed by the superseded
+        snapshot's fingerprint can never be served for the new machine (the
+        fingerprint is part of the key), so dirtying them just stops holders
+        short-circuiting on stale entries.  Advisory either way:
+        :meth:`plan` re-verifies bytes before serving anything.
         """
         with self._lock:
             if wclass is not None:
                 keys = list(self._by_class.get(wclass, ()))
+            elif machine_fp is not None:
+                keys = [k for k in self._plans if k[2] == machine_fp]
             elif engine is not None:
                 keys = list(self._plans.keys())
             else:

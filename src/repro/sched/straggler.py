@@ -33,6 +33,12 @@ class StragglerEvent:
     new_makespan: float
 
 
+# A lost worker is a FULLY-degraded class column: large enough that CEFT
+# never maps work onto it, small enough to stay finite in float32 cost
+# planes (inf would poison the min-plus sweep with NaNs).
+LOST_SLOWDOWN = 1e6
+
+
 class EwmaCostTable:
     """Online per-(workload-class, processor-class) cost model.
 
@@ -50,6 +56,12 @@ class EwmaCostTable:
 
     Thread-safe: the router executes micro-batches on per-engine worker
     threads, each feeding measurements back concurrently.
+
+    Elastic: the class count may GROW while the table lives (the engine pool
+    launches workers).  An update or degradation report for a class index the
+    table has never seen widens every row (new entries NaN -> fallback rules
+    above) instead of raising — a just-launched worker must be explorable,
+    and a just-lost one degradable, without resetting learned rates.
     """
 
     def __init__(self, n_classes: int, alpha: float = 0.3, default: float = 1.0):
@@ -59,6 +71,29 @@ class EwmaCostTable:
         self._rows: dict = {}
         self._lock = threading.Lock()
         self._listeners: list = []
+
+    def ensure_classes(self, n: int) -> None:
+        """Widen the table to ``n`` processor classes (no-op when already
+        that wide); existing rows are padded with NaN (the explore default)."""
+        with self._lock:
+            self._ensure_locked(int(n))
+
+    def _ensure_locked(self, n: int) -> None:
+        if n <= self.n_classes:
+            return
+        pad = n - self.n_classes
+        for key, row in self._rows.items():
+            self._rows[key] = np.concatenate([row, np.full(pad, np.nan)])
+        self.n_classes = n
+
+    def reset_class(self, cls: int) -> None:
+        """Forget every rate measured for one class column (a freed pool slot
+        was revived by a DIFFERENT worker: its predecessor's rates are not
+        evidence about it)."""
+        with self._lock:
+            if cls < self.n_classes:
+                for row in self._rows.values():
+                    row[cls] = np.nan
 
     def add_listener(self, fn) -> None:
         """Register ``fn(key, cls)`` to run after every :meth:`update` — the
@@ -70,6 +105,9 @@ class EwmaCostTable:
 
     def update(self, key, cls: int, value: float) -> None:
         with self._lock:
+            # a measurement for an engine this table has never seen (a
+            # just-launched pool worker) widens the table instead of raising
+            self._ensure_locked(int(cls) + 1)
             row = self._rows.get(key)
             if row is None:
                 row = self._rows[key] = np.full(self.n_classes, np.nan)
@@ -96,7 +134,15 @@ class EwmaCostTable:
 
 
 class StragglerMonitor:
-    """EWMA per device class; replan when a class drifts > threshold."""
+    """EWMA per device class; replan when a class drifts > threshold.
+
+    Elastic (the engine-pool contract): the class count grows on demand —
+    a slowdown report or loss mark for a class the monitor has never seen
+    (a just-launched or just-lost worker) widens the arrays and registers a
+    degraded column instead of raising.  A LOST class reports
+    :data:`LOST_SLOWDOWN` until revived, so the batched nominal+degraded
+    re-plan that already handles stragglers covers failover unchanged.
+    """
 
     def __init__(self, n_classes: int, alpha: float = 0.2, threshold: float = 1.3,
                  plancache: PlanCache | None = None):
@@ -104,6 +150,7 @@ class StragglerMonitor:
         self.threshold = threshold
         self.ewma = np.ones(n_classes) * np.nan
         self.baseline = np.ones(n_classes) * np.nan
+        self.lost = np.zeros(n_classes, bool)
         self.events: list[StragglerEvent] = []
         # nominal-schedule caching is a thin view over the unified plan cache
         # (repro.sched.plancache): swept plans are content-keyed there by
@@ -123,14 +170,72 @@ class StragglerMonitor:
             sched = entry.derived["cpop"] = ceft_cpop(g, comp, m, res)
         return sched
 
+    def ensure_classes(self, n: int) -> None:
+        """Widen to ``n`` classes (never shrinks): new columns start
+        unobserved (NaN EWMA/baseline) and healthy (not lost)."""
+        n = int(n)
+        if n <= len(self.ewma):
+            return
+        pad = n - len(self.ewma)
+        self.ewma = np.concatenate([self.ewma, np.full(pad, np.nan)])
+        self.baseline = np.concatenate([self.baseline, np.full(pad, np.nan)])
+        self.lost = np.concatenate([self.lost, np.zeros(pad, bool)])
+
+    def slowdowns(self) -> np.ndarray:
+        """Current per-class slowdown factors (>= 1): unobserved columns are
+        nominal (1.0), lost columns are :data:`LOST_SLOWDOWN`."""
+        with np.errstate(invalid="ignore"):
+            s = np.where(np.isnan(self.ewma) | np.isnan(self.baseline), 1.0,
+                         np.maximum(self.ewma / self.baseline, 1.0))
+        return np.where(self.lost, LOST_SLOWDOWN, s)
+
+    def report(self, cls: int, slowdown: float) -> np.ndarray:
+        """Register a degraded column directly — the path for slowdown
+        reports about an engine the monitor has never seen (a just-launched
+        or just-lost pool worker), which must grow the arrays instead of
+        raising (ISSUE 7 regression).  Returns the slowdown factors."""
+        cls = int(cls)
+        self.ensure_classes(cls + 1)
+        if np.isnan(self.baseline[cls]):
+            self.baseline[cls] = 1.0
+        self.ewma[cls] = self.baseline[cls] * float(slowdown)
+        return self.slowdowns()
+
+    def mark_lost(self, cls: int) -> np.ndarray:
+        """A worker died: its class column becomes fully degraded (grows the
+        arrays for never-observed classes).  Returns the slowdown factors."""
+        cls = int(cls)
+        self.ensure_classes(cls + 1)
+        self.lost[cls] = True
+        return self.slowdowns()
+
+    def revive(self, cls: int) -> None:
+        """A freed slot was relaunched: clear the lost flag and forget the
+        previous worker's timing evidence for that column."""
+        cls = int(cls)
+        self.ensure_classes(cls + 1)
+        self.lost[cls] = False
+        self.ewma[cls] = np.nan
+        self.baseline[cls] = np.nan
+
     def observe(self, class_times: np.ndarray) -> np.ndarray:
-        """Update EWMAs; returns per-class slowdown factors (>= 1)."""
+        """Update EWMAs; returns per-class slowdown factors (>= 1).
+
+        ``class_times`` may be wider than the monitor (just-launched
+        workers: the arrays grow) or narrower (times for a prefix of the
+        classes: the unmeasured tail keeps its current estimate)."""
+        class_times = np.asarray(class_times, np.float64)
+        self.ensure_classes(len(class_times))
+        if len(class_times) < len(self.ewma):
+            tail = self.ewma[len(class_times):]
+            class_times = np.concatenate(
+                [class_times, np.where(np.isnan(tail), 1.0, tail)])
         new = np.isnan(self.ewma)
         self.ewma = np.where(new, class_times,
                              self.alpha * class_times + (1 - self.alpha) * self.ewma)
         self.baseline = np.where(np.isnan(self.baseline), self.ewma,
                                  np.minimum(self.baseline, self.ewma))
-        return np.maximum(self.ewma / self.baseline, 1.0)
+        return self.slowdowns()
 
     def maybe_replan(self, step: int, g: TaskGraph, comp: np.ndarray, m: Machine,
                      class_times: np.ndarray):

@@ -1,6 +1,15 @@
 from .engine import Engine, ServeConfig
+from .pool import (
+    EnginePool,
+    EngineSlot,
+    WorkerLost,
+    WorkerSpec,
+    null_engine_factory,
+    smoke_engine_factory,
+)
 from .queue import AdmissionQueue, Request, class_mix, workload_class
-from .router import Dispatch, EngineSlot, Router, router_machine
-__all__ = ["AdmissionQueue", "Dispatch", "Engine", "EngineSlot", "Request",
-           "Router", "ServeConfig", "class_mix", "router_machine",
-           "workload_class"]
+from .router import Dispatch, Router, router_machine
+__all__ = ["AdmissionQueue", "Dispatch", "Engine", "EnginePool", "EngineSlot",
+           "Request", "Router", "ServeConfig", "WorkerLost", "WorkerSpec",
+           "class_mix", "null_engine_factory", "router_machine",
+           "smoke_engine_factory", "workload_class"]

@@ -46,19 +46,11 @@ import numpy as np
 from ..core.ceft import CeftResult
 from ..core.ceft_jax import request_graph
 from ..core.machine import Machine
-from ..sched.plancache import PlanCache
+from ..sched.plancache import PlanCache, machine_fingerprint
 from ..sched.straggler import EwmaCostTable, StragglerMonitor
 from .engine import ServeConfig
+from .pool import EnginePool, EngineSlot, WorkerLost
 from .queue import AdmissionQueue, Request, class_mix
-
-
-@dataclasses.dataclass
-class EngineSlot:
-    """One pool member: anything with ``generate(prompts, ServeConfig)``,
-    pinned to a sharding profile (real Engines re-enter it per trace)."""
-    name: str
-    engine: object
-    profile: str
 
 
 @dataclasses.dataclass
@@ -82,22 +74,35 @@ def router_machine(P: int, *, kv_bw: float = 1e4, latency: float = 1e-3) -> Mach
 
 
 class Router:
-    """Owns the engine pool, the admission queue, and the cost model; turns
-    each tick's pending requests into CEFT-planned dispatches."""
+    """Plans over the placement plane and owns the admission queue and cost
+    model; turns each tick's pending requests into CEFT-planned dispatches.
 
-    def __init__(self, slots: Sequence[EngineSlot], *, machine: Machine | None = None,
+    The router no longer constructs or holds engines: ``pool`` (an
+    :class:`~repro.serve.pool.EnginePool`, or a plain ``EngineSlot`` list
+    wrapped into one) owns worker lifecycle and the measured comm plane, and
+    every plan prices against ``pool.machine()`` — a snapshot that only
+    changes when the pool's shape or a quantized measurement does, so the
+    plan cache's machine fingerprints stay meaningful."""
+
+    def __init__(self, pool: EnginePool | Sequence[EngineSlot], *,
+                 machine: Machine | None = None,
                  queue: AdmissionQueue | None = None, alpha: float = 0.3,
                  default_rate: float = 1e-3, max_batch: int = 8,
                  latency_slack: float = 1.0, straggler_threshold: float = 1.3,
                  plancache: PlanCache | None = None,
                  tick_budget: int | None = None):
-        if not slots:
-            raise ValueError("router needs at least one engine slot")
-        self.slots = list(slots)
-        P = len(self.slots)
-        self.machine = machine if machine is not None else router_machine(P)
+        if not isinstance(pool, EnginePool):
+            if not pool:
+                raise ValueError("router needs at least one engine slot")
+            pool = EnginePool.from_slots(pool, machine=machine)
+        elif machine is not None:
+            raise ValueError("pass machine= to the pool, not past it")
+        self.pool = pool
+        if not self.pool.size:
+            raise ValueError("router needs at least one pool worker")
+        P = self.pool.size
         if self.machine.P != P:
-            raise ValueError(f"machine has {self.machine.P} classes for {P} slots")
+            raise ValueError(f"machine has {self.machine.P} classes for {P} workers")
         self.queue = queue if queue is not None else AdmissionQueue()
         self.costs = EwmaCostTable(P, alpha=alpha, default=default_rate)
         self.monitor = StragglerMonitor(P, threshold=straggler_threshold)
@@ -105,6 +110,9 @@ class Router:
         # a measured rate delta dirties exactly the cached plans whose DAG
         # contains that workload class (the cache's reverse index)
         self.costs.add_listener(self._on_cost_delta)
+        # pool lifecycle deltas (loss, launch, drain) degrade/revive the
+        # matching straggler column and dirty the cached plans
+        self.pool.add_listener(self._on_pool_event)
         # tick_budget=None keeps the historical dispatch-everything tick;
         # an integer bounds dispatches per tick, split round-robin across
         # classes, with the remainder staying resident for later ticks
@@ -113,10 +121,13 @@ class Router:
         self.max_batch = int(max_batch)
         self.latency_slack = float(latency_slack)
         self._slow = np.ones(P)
+        self._P = P
+        self._m_snapshot = self.machine
         self.stats = {"plans": 0, "degraded_plans": 0, "dispatches": 0,
                       "coalesced": 0, "split": 0, "shed": 0, "ticks": 0,
                       "cache_hits": 0, "invalidations": 0,
-                      "partial_sweeps": 0, "resident": 0}
+                      "partial_sweeps": 0, "resident": 0, "requeued": 0}
+        self.failures: list[tuple[str, BaseException]] = []
         self.last_plan: CeftResult | None = None
         self.last_nominal: CeftResult | None = None
         self.last_dag: tuple | None = None
@@ -125,6 +136,16 @@ class Router:
         self._plan_comp: np.ndarray | None = None
         self._chosen: dict | None = None       # class index -> (engine, on_path)
         self._entry = None                     # the cached plan's PlanEntry
+
+    @property
+    def machine(self) -> Machine:
+        """The pool's current Machine snapshot (the placement plane view)."""
+        return self.pool.machine()
+
+    @property
+    def slots(self) -> list[EngineSlot]:
+        """Engine-slot view of the pool (compat: slot index == CEFT class)."""
+        return self.pool.slots
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request) -> bool:
@@ -156,6 +177,51 @@ class Router:
             self.stats["invalidations"] += self.plancache.invalidate(
                 engine=int(np.argmax(self._slow)))
         return self._slow
+
+    # ----------------------------------------------------------- pool deltas
+    def _on_pool_event(self, event: str, payload) -> None:
+        """EnginePool listener.  Loss/drain fully degrade the worker's class
+        column (the straggler plane routes the critical path around it — the
+        batched nominal+degraded re-plan IS the failover path); launch
+        revives the column and forgets the previous occupant's rates.  All
+        three dirty the cached plans and drop the steady-state signature."""
+        if event == "machine":
+            # a measured comm-plane delta crossed a quantization bucket: the
+            # superseded snapshot's plans can only be stale short-circuits
+            self.stats["invalidations"] += self.plancache.invalidate(
+                machine_fp=machine_fingerprint(payload))
+        elif event in ("lost", "drain"):
+            self._slow = self.monitor.mark_lost(int(payload))
+            self.stats["invalidations"] += self.plancache.invalidate(
+                engine=int(payload))
+        elif event == "launch":
+            self.monitor.revive(int(payload))
+            self.costs.reset_class(int(payload))
+            self._slow = self.monitor.slowdowns()
+            self.stats["invalidations"] += self.plancache.invalidate()
+        self._plan_sig = None
+
+    def _sync_pool(self) -> None:
+        """Re-align the planning state with the pool's current shape and
+        Machine snapshot (workers may have launched, drained, or died since
+        the last tick; probes may have moved the measured comm plane)."""
+        P = self.pool.size
+        if P != self._P:
+            self._P = P
+            self.costs.ensure_classes(P)
+            self.monitor.ensure_classes(P)
+            self._plan_sig = None
+        slow = self.monitor.slowdowns()
+        if len(slow) < P:
+            self.monitor.ensure_classes(P)
+            slow = self.monitor.slowdowns()
+        self._slow = slow[:P]
+        m = self.pool.machine()
+        if m is not self._m_snapshot:
+            self.stats["invalidations"] += self.plancache.invalidate(
+                machine_fp=machine_fingerprint(self._m_snapshot))
+            self._m_snapshot = m
+            self._plan_sig = None
 
     # --------------------------------------------------------------- planning
     def build_dag(self, groups: list[tuple[tuple[int, int], list[Request]]]):
@@ -243,6 +309,10 @@ class Router:
         has dirtied it, the tick serves the plan straight from cache — zero
         sweeps, no cost-plane build, cost O(classes + budget) independent of
         the resident count (gated by the jax_csr_router_steady bench row)."""
+        if self.pool.autoscale:
+            backlog = len(self.queue) + sum(len(q) for q in self.resident.values())
+            self.pool.maybe_autoscale(backlog)
+        self._sync_pool()
         for r in self.queue.drain():
             self.resident.setdefault(r.wclass, deque()).append(r)
         self.stats["ticks"] += 1
@@ -335,9 +405,9 @@ class Router:
         prompts = np.stack([r.prompt for r in d.requests]).astype(np.int32)
         plen = prompts.shape[1]
         max_new = max(int(r.max_new) for r in d.requests)
-        slot = self.slots[d.engine]
         t0 = time.perf_counter()
-        toks = slot.engine.generate(prompts, ServeConfig(max_new_tokens=max_new))
+        toks = self.pool.generate(d.engine, prompts,
+                                  ServeConfig(max_new_tokens=max_new))
         dt = time.perf_counter() - t0
         # the engine generates the batch max_new for every row; charge the
         # rate for the work actually done and trim each row to its own budget
@@ -346,6 +416,16 @@ class Router:
         return {r.rid: toks[b, : plen + int(r.max_new)]
                 for b, r in enumerate(d.requests)}
 
+    def _requeue(self, ds: list[Dispatch]) -> None:
+        """Put un-served dispatches back at the FRONT of their resident
+        queues (FIFO order preserved) so the next tick re-plans them."""
+        for d in ds:
+            q = self.resident.setdefault(d.wclass, deque())
+            for r in reversed(d.requests):
+                q.appendleft(r)
+            self.stats["requeued"] += len(d.requests)
+        self.stats["resident"] = sum(len(q) for q in self.resident.values())
+
     def serve(self, max_ticks: int = 64) -> dict[int, np.ndarray]:
         """Tick until the queue AND residents are empty (or max_ticks): the
         launcher's loop.
@@ -353,26 +433,52 @@ class Router:
         Each tick's micro-batches execute on one worker thread *per engine*
         (each engine runs its own dispatches in planned order): the CEFT
         makespan assumes the processor classes work in parallel, and the
-        scoped-profile substrate makes concurrent engine traces safe."""
+        scoped-profile substrate makes concurrent engine traces safe.
+
+        Failure semantics: a worker DEATH (:class:`WorkerLost` — a killed
+        subprocess, a dead pipe) is degradation, not an abort.  The lost
+        worker's pending dispatches re-enter the resident queues, the pool
+        listener has already marked the class column fully degraded, and the
+        next tick's nominal+degraded re-plan routes the in-flight workload
+        to the survivors — their completed results are kept throughout.
+        Each loss is recorded in ``self.failures`` with per-engine context.
+        Engine ERRORS (an exception from a live engine) still fail the loop
+        loudly, all concurrent failures aggregated — a silent partial result
+        dict would pass smoke runs.  Losing the LAST live worker raises,
+        aggregating every recorded loss."""
         done: dict[int, np.ndarray] = {}
         lock = threading.Lock()
-        errors: list[tuple[str, BaseException]] = []
         for _ in range(max_ticks):
             if not len(self.queue) and not self.resident:
                 break
+            if not self.pool.live_indices():
+                agg = RuntimeError(
+                    f"no live pool workers remain ({len(self.failures)} "
+                    "lost): "
+                    + "; ".join(f"{name}: {type(e).__name__}: {e}"
+                                for name, e in self.failures))
+                agg.failures = list(self.failures)
+                raise agg
+            errors: list[tuple[str, BaseException]] = []
+            lost: list[tuple[str, WorkerLost, list[Dispatch]]] = []
             per_engine: dict[int, list[Dispatch]] = {}
             for d in self.tick():
                 per_engine.setdefault(d.engine, []).append(d)
 
             def worker(name: str, ds: list[Dispatch]):
-                try:
-                    for d in ds:
+                for i, d in enumerate(ds):
+                    try:
                         out = self.run_dispatch(d)
+                    except WorkerLost as e:   # degradation: requeue the rest
                         with lock:
-                            done.update(out)
-                except BaseException as e:  # surfaced after join, not lost
+                            lost.append((name, e, ds[i:]))
+                        return
+                    except BaseException as e:  # surfaced after join, not lost
+                        with lock:
+                            errors.append((name, e))
+                        return
                     with lock:
-                        errors.append((name, e))
+                        done.update(out)
 
             threads = [threading.Thread(target=worker,
                                         args=(self.slots[eng].name, ds))
@@ -381,6 +487,9 @@ class Router:
                 t.start()
             for t in threads:
                 t.join()
+            for name, e, pending in lost:
+                self.failures.append((name, e))
+                self._requeue(pending)
             if errors:
                 # dead engines must fail the serve loop loudly -- silently
                 # returning a partial result dict would pass smoke runs --

@@ -17,10 +17,12 @@ from .compat import (
     current_abstract_mesh,
     current_axis_sizes,
     degrade_spec,
+    host_id,
     jax_mesh_api,
     make_mesh,
     mesh_axis_sizes,
     mesh_context,
+    process_topology,
     shard_map,
 )
 
@@ -31,9 +33,11 @@ __all__ = [
     "current_abstract_mesh",
     "current_axis_sizes",
     "degrade_spec",
+    "host_id",
     "jax_mesh_api",
     "make_mesh",
     "mesh_axis_sizes",
     "mesh_context",
+    "process_topology",
     "shard_map",
 ]

@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import contextlib
 import math
+import os
+import socket
 from typing import Any, Iterator, Sequence
 
 import jax
@@ -94,6 +96,32 @@ def current_axis_sizes() -> dict[str, int] | None:
     """axis-name -> size of the active mesh, or None outside any mesh."""
     am = current_abstract_mesh()
     return None if am is None else dict(am.shape)
+
+
+# ------------------------------------------------------------------ topology
+def host_id() -> str:
+    """A stable identifier for this host (the pool's placement unit)."""
+    return socket.gethostname()
+
+
+def process_topology() -> dict:
+    """Host/process placement of the CURRENT process — the seam the engine
+    pool probes through: same pid => in-process transfer, same host / other
+    pid => pipe transport, other host => network (future).
+
+    Accelerator facts are best-effort: they initialize the jax backend, and a
+    worker that cannot (or a caller probing before backend setup) still gets
+    the host/process identity.
+    """
+    info: dict = {"host": host_id(), "pid": os.getpid(),
+                  "n_cpus": os.cpu_count() or 1}
+    try:
+        info["platform"] = jax.default_backend()
+        info["n_devices"] = jax.device_count()
+    except Exception:  # pragma: no cover - backend init failure
+        info["platform"] = None
+        info["n_devices"] = 0
+    return info
 
 
 # ------------------------------------------------------------- cost analysis

@@ -1,3 +1,9 @@
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
 import numpy as np
 import pytest
 
@@ -5,6 +11,40 @@ try:
     from hypothesis import settings
 except ModuleNotFoundError:  # property tests auto-skip via tests/_hyp.py
     settings = None
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_isolated_script(body: str, *, fake_devices: int | None = None,
+                        env: dict | None = None, timeout: int = 500,
+                        marker: str | None = None):
+    """Run ``body`` in a fresh interpreter with ``src/`` on PYTHONPATH.
+
+    The shared bootstrap for every test that needs its own process — e.g.
+    because the fake host-device count must be set before jax initializes
+    (``fake_devices`` prepends the XLA_FLAGS override; the calling test
+    process keeps its single real CPU device), or because it exercises the
+    engine pool's subprocess workers end-to-end.  Asserts exit code 0 (and
+    that ``marker`` appeared on stdout, when given); returns the completed
+    process for further assertions.
+    """
+    prelude = ""
+    if fake_devices is not None:
+        prelude = (
+            "import os\n"
+            "os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={int(fake_devices)}'\n")
+    full_env = dict(os.environ)
+    pp = full_env.get("PYTHONPATH", "")
+    full_env["PYTHONPATH"] = str(REPO / "src") + (os.pathsep + pp if pp else "")
+    full_env.update(env or {})
+    r = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(body)],
+        env=full_env, capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, r.stdout + r.stderr
+    if marker is not None:
+        assert marker in r.stdout, r.stdout + r.stderr
+    return r
 
 if settings is not None:
     # keep hypothesis fast on the 1-core CI box

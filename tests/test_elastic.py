@@ -2,20 +2,14 @@
 restore onto a *shrunk* (2,2) mesh (simulating losing half the fleet) and
 continue training with identical loss trajectory.
 
-Runs in a subprocess because the fake-device count must be set before jax
-initializes (the main test process keeps the single real CPU device).
+Runs via conftest.run_isolated_script (shared with the engine-pool subprocess
+tests) because the fake-device count must be set before jax initializes (the
+main test process keeps the single real CPU device).
 """
-import os
-import subprocess
-import sys
-import textwrap
-from pathlib import Path
+from conftest import run_isolated_script
 
-REPO = Path(__file__).resolve().parent.parent
-
-SCRIPT = textwrap.dedent("""
+SCRIPT = """
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
     import jax
     from jax.sharding import Mesh
@@ -63,14 +57,10 @@ SCRIPT = textwrap.dedent("""
         # exactness is asserted in test_recovery_reproduces_unfailed_run
         assert abs(loss - r) / abs(r) < 2e-2, (step, loss, r)
     print("ELASTIC_OK")
-""")
+"""
 
 
 def test_elastic_reshard(tmp_path):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = str(REPO / "src")
-    env["CKPT_DIR"] = str(tmp_path / "ck")
-    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                       capture_output=True, text=True, timeout=500)
-    assert r.returncode == 0, r.stdout + r.stderr
-    assert "ELASTIC_OK" in r.stdout
+    run_isolated_script(SCRIPT, fake_devices=8,
+                        env={"CKPT_DIR": str(tmp_path / "ck")},
+                        marker="ELASTIC_OK")

@@ -411,6 +411,40 @@ def test_serve_aggregates_concurrent_engine_failures():
     assert all(isinstance(e, RuntimeError) for _, e in err.failures)
 
 
+def test_serve_keeps_survivors_when_pool_worker_dies_mid_tick():
+    """A pool worker DEATH mid-tick is degradation, not an abort (ISSUE 7):
+    the survivors' results from the same tick are kept, the loss lands in
+    ``router.failures`` with per-engine context instead of raising, and the
+    next tick's plan routes the dead worker's requeued work around it."""
+    from repro.serve import WorkerLost
+
+    class CrashingEngine:
+        def generate(self, prompts, scfg):
+            raise WorkerLost("e1", 1, "SIGKILL mid-tick")
+
+    slots = [EngineSlot("e0", FakeEngine(), "baseline"),
+             EngineSlot("e1", CrashingEngine(), "baseline")]
+    router = Router(slots)
+    # rates steering one class to each engine, so both threads run this tick
+    router.costs.update((8, 4), 0, 1e-3)
+    router.costs.update((8, 4), 1, 2e-3)
+    router.costs.update((16, 4), 0, 2e-3)
+    router.costs.update((16, 4), 1, 1e-3)
+    rng = np.random.default_rng(21)
+    _submit_mixed(router, rng, per_class=2)
+    done = router.serve()                       # must NOT raise
+    assert len(done) == 4, "survivor results kept, lost work re-served"
+    assert slots[0].engine.calls, "survivor actually ran"
+    (name, err), = router.failures
+    assert name == "e1" and isinstance(err, WorkerLost)
+    assert err.index == 1 and "SIGKILL" in err.cause
+    assert router.pool.state(1) == "lost"
+    # the re-planned ticks mapped everything onto the survivor
+    assert set(dict(router.last_plan.path).values()) == {0}
+    assert router.stats["requeued"] > 0
+    assert router.stats["degraded_plans"] >= 1
+
+
 def test_run_dispatch_trims_rows_to_request_budget():
     """Coalesced requests with different max_new: each returned row is cut to
     its own prompt+max_new budget, not the batch maximum."""
