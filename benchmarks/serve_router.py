@@ -44,9 +44,9 @@ class _NullEngine:
         return np.zeros((B, P + scfg.max_new_tokens), np.int32)
 
 
-def _make_router(P: int, classes: int, rng) -> Router:
+def _make_router(P: int, classes: int, rng, **kw) -> Router:
     slots = [EngineSlot(f"e{i}", _NullEngine(), "baseline") for i in range(P)]
-    router = Router(slots, max_batch=8)
+    router = Router(slots, max_batch=8, **kw)
     # pre-seeded heterogeneous per-token rates: ties would make the plan
     # degenerate (every class argmins to engine 0) and unrepresentative
     for c in range(classes):
@@ -131,6 +131,7 @@ def run(seed: int = 7, json_rows: list | None = None):
             })
     _run_steady(csv, seed, per_class, json_rows)
     _run_scaleout(csv, seed, per_class, json_rows)
+    _run_hedge(csv, seed, per_class, json_rows)
 
 
 def _refill(router: Router, ds, rng) -> None:
@@ -234,6 +235,69 @@ def _run_scaleout(csv: CSV, seed: int, per_class: int,
                 "e": int(len(src)), "ms": float(best * 1e3), "speedup": None,
                 "speedup_vs_padded": None,
             })
+
+
+def _run_hedge(csv: CSV, seed: int, per_class: int,
+               json_rows: list | None) -> None:
+    """ISSUE 8: steady-tick latency with the deadline watchdog armed vs
+    disarmed.  The armed timed region includes everything serving pays per
+    dispatch when armed — tick + planned_span pricing + arm/disarm on the
+    watchdog — with the monitor thread sweeping concurrently (deadlines far
+    enough out that nothing fires: this measures bookkeeping, not faults).
+    Flatness-asserted so check_regression's 2x gate on the jax_csr prefix
+    catches a monitor thread or arming path that starts costing real time."""
+    from repro.serve.queue import next_seq
+
+    P, classes, budget = 4, 4, 4
+    ms = {}
+    for armed in (False, True):
+        rng = np.random.default_rng(seed)
+        kw = (dict(deadline_factor=50.0, min_deadline=10.0, wd_poll=0.005)
+              if armed else {})
+        router = _make_router(P, classes, rng, **kw)
+        router.tick_budget = budget
+        wd = router.watchdog
+        if wd is not None:
+            wd.start()
+        try:
+            _submit(router, classes, per_class, rng)
+            ds = router.tick()                # warm: the one real plan
+            _refill(router, ds, rng)
+            best = np.inf
+            for _ in range(30):
+                t0 = time.perf_counter()
+                ds = router.tick()
+                if wd is not None:
+                    for d in ds:
+                        seq = next_seq()
+                        wd.arm(seq, d, planned_span=router.planned_span(d),
+                               engine=d.engine,
+                               on_critical_path=d.on_critical_path)
+                        wd.disarm(seq)
+                best = min(best, time.perf_counter() - t0)
+                _refill(router, ds, rng)
+        finally:
+            if wd is not None:
+                wd.stop()
+        assert router.stats["overdue"] == 0, \
+            "hedge bench misconfigured: deadlines fired during timing"
+        label = "armed" if armed else "disarmed"
+        n = per_class * classes
+        ms[armed] = best
+        csv.row("serve_router", label, n, P, 0, "jax_csr_router_hedge",
+                f"{best * 1e3:.3f}", f"{1.0 / best:.1f}", len(ds))
+        if json_rows is not None:
+            json_rows.append({
+                "bench": "serve_router", "graph": label, "impl":
+                "jax_csr_router_hedge", "n": int(n), "P": int(P), "e": 0,
+                "ms": float(best * 1e3), "speedup": None,
+                "speedup_vs_padded": None,
+            })
+    # the watchdog must be ~free when quiet (same noise floor as the steady
+    # flatness gate: 0.2ms absolute absorbs timer jitter at smoke scale)
+    assert ms[True] <= 1.25 * ms[False] + 2e-4, (
+        f"armed steady tick regressed: {ms[False] * 1e3:.3f}ms disarmed vs "
+        f"{ms[True] * 1e3:.3f}ms armed")
 
 
 def _graph(n, src, dst, data):

@@ -138,6 +138,32 @@ if [ -n "$violations" ]; then
 fi
 echo "ci: placement-plane ownership invariant holds"
 
+# Fault-injection containment (ISSUE 8): the chaos harness attaches through
+# the pool's public handle-wrapper seam, and that seam (plus the injector
+# machinery) must stay private to serve/faults.py -- production modules may
+# not install handle middleware or reach fault hooks directly.  The launcher
+# is the one sanctioned consumer (install_chaos behind --chaos-seed).
+echo "ci: forbidden-API grep (fault-injection hooks outside serve/faults.py)"
+violations=$(grep -rnE "add_handle_wrapper|_handle_wrappers|_FaultyHandle" \
+    src/ benchmarks/ --include='*.py' \
+    | grep -v "^src/repro/serve/pool.py:" \
+    | grep -v "^src/repro/serve/faults.py:" || true)
+if [ -n "$violations" ]; then
+    echo "ci: FAIL -- fault-injection hook used outside src/repro/serve/faults.py:"
+    echo "$violations"
+    exit 1
+fi
+violations=$(grep -rnE "FaultInjector|FaultPlan|install_chaos" \
+    src/ benchmarks/ --include='*.py' \
+    | grep -v "^src/repro/serve/faults.py:" \
+    | grep -v "^src/repro/launch/serve.py:" || true)
+if [ -n "$violations" ]; then
+    echo "ci: FAIL -- fault machinery referenced outside faults.py/launch/serve.py:"
+    echo "$violations"
+    exit 1
+fi
+echo "ci: fault-injection containment invariant holds"
+
 echo "ci: tier-1 tests"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
@@ -148,6 +174,21 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
     --router --tenants 2 --pool serve,baseline --requests 2 \
     --prompt-len 8 --max-new 2 > /dev/null
 echo "ci: router smoke ok"
+
+# Chaos smoke (ISSUE 8): the same front-end under the seeded fault injector
+# (kills + hangs + delayed/duplicated replies scheduled by the seed) with
+# the deadline watchdog armed.  The launcher exits nonzero unless every
+# admitted request completed exactly once and hedge work stayed bounded by
+# the overdue critical-path count -- the chaos soak's acceptance, as a smoke.
+echo "ci: chaos smoke (repro.launch.serve --router --chaos-seed)"
+# seed 13 @ rate 0.35 schedules a kill, two hangs and a held-duplicate reply
+# across the first calls -- verified deterministic by FaultPlan.seeded
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
+    --router --tenants 2 --pool serve,baseline --pool-size 4 --requests 3 \
+    --prompt-len 8 --max-new 2 --deadline-factor 3 --chaos-seed 13 \
+    --chaos-rate 0.35 \
+    | grep "chaos: every admitted request completed exactly once"
+echo "ci: chaos smoke ok"
 
 # Perf trajectory + regression gate (ISSUE 3 + 4): refresh the
 # machine-readable CEFT baseline on every CI pass, then diff the fresh rows

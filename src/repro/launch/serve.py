@@ -14,8 +14,17 @@ measured comm plane, --autoscale lets the pool grow/drain with queue depth.
       --pool serve,baseline --requests 4 --max-new 4
   PYTHONPATH=src python -m repro.launch.serve --router --pool-size 4 \
       --autoscale --backend subprocess --requests 8
+
+Failure containment (--deadline-factor N arms the plan-derived deadline
+watchdog; --chaos-seed S additionally runs the whole thing under the
+deterministic fault injector and asserts every admitted request completed
+exactly once — the local chaos soak):
+
+  PYTHONPATH=src python -m repro.launch.serve --router --pool-size 4 \
+      --requests 4 --deadline-factor 3 --chaos-seed 7
 """
 import argparse
+import sys
 
 import numpy as np
 
@@ -57,7 +66,20 @@ def run_router(args) -> None:
         high_water=args.batch)
     if pool.probe != "static":
         pool.refresh_probes()
-    router = Router(pool, max_batch=args.batch)
+    chaos = None
+    if args.chaos_seed is not None:
+        from ..serve.faults import install_chaos
+        chaos = install_chaos(pool, args.chaos_seed, rate=args.chaos_rate,
+                              hold=1.0)
+    deadline_factor = args.deadline_factor if args.deadline_factor > 0 else None
+    if chaos is not None and deadline_factor is None:
+        deadline_factor = 3.0   # chaos without the watchdog would just hang
+    # generous floor under chaos: smoke engines jit-compile on first
+    # generate, and a compile must not read as a blown deadline
+    min_deadline = 2.0 if chaos is not None else 0.05
+    router = Router(pool, max_batch=args.batch,
+                    deadline_factor=deadline_factor, hedge=args.hedge,
+                    min_deadline=min_deadline)
     rng = np.random.default_rng(0)
     # tenant i leans to its own prompt-length bucket -> a mixed-class DAG
     tenant_of: dict[int, str] = {}
@@ -71,8 +93,10 @@ def run_router(args) -> None:
             else:
                 print(f"tenant{t}: request rejected (admission control)")
     try:
-        done = router.serve()
+        done = router.serve(max_ticks=args.max_ticks)
     finally:
+        if chaos is not None:
+            chaos.release()
         pool.close()
     names = ", ".join(s.name for s in router.slots)
     print(f"router: {len(done)} requests served on {pool.size} workers "
@@ -98,6 +122,40 @@ def run_router(args) -> None:
         path = router.last_plan.path
         print(f"router: last critical path (task, engine): {path} "
               f"cpl={router.last_plan.cpl:.4f}s")
+    if router.watchdog is not None:
+        w = router.watchdog.stats
+        print(f"router: watchdog armed={w['armed']} sweeps={w['sweeps']} "
+              f"overdue={s['overdue']} overdue_cp={s['overdue_cp']} "
+              f"hedges={s['hedges']} stale_replies={s['stale_replies']} "
+              f"requeued={s['requeued']} wd_lost={s['watchdog_lost']}")
+    if chaos is not None:
+        f = chaos.stats
+        fired = {k: v for k, v in f.items() if k != "calls" and v}
+        print(f"chaos: seed={args.chaos_seed} calls={f['calls']} "
+              f"fired={fired or 'none'}")
+        # the soak's contract: every admitted request completes EXACTLY once
+        # (zero lost, zero double-completed — duplicates were dropped as
+        # stale), and hedge duplicate work stays bounded by the overdue
+        # critical-path dispatch count
+        admitted = set(tenant_of)
+        missing = sorted(admitted - set(done))
+        ok = True
+        if missing:
+            ok = False
+            print(f"chaos: FAIL {len(missing)} admitted requests never "
+                  f"completed: {missing}")
+        if s["completions"] != len(done):
+            ok = False
+            print(f"chaos: FAIL completion count {s['completions']} != "
+                  f"{len(done)} distinct rids (double-completion)")
+        if s["hedges"] > s["overdue_cp"]:
+            ok = False
+            print(f"chaos: FAIL hedges ({s['hedges']}) exceed overdue "
+                  f"critical-path dispatches ({s['overdue_cp']})")
+        if not ok:
+            sys.exit(1)
+        print(f"chaos: every admitted request completed exactly once "
+              f"({len(done)}/{len(admitted)})")
 
 
 def main():
@@ -127,6 +185,20 @@ def main():
                     help="router mode: scale the pool out/in with queue depth")
     ap.add_argument("--max-pool-size", type=int, default=8,
                     help="router mode: autoscale ceiling")
+    ap.add_argument("--max-ticks", type=int, default=64,
+                    help="router mode: serve-loop tick cap")
+    ap.add_argument("--deadline-factor", type=float, default=0.0,
+                    help="arm the deadline watchdog: budget = factor x "
+                         "planned span per dispatch (0 = disarmed)")
+    ap.add_argument("--hedge", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="speculatively re-dispatch overdue critical-path "
+                         "work to the degraded plane's best alternate")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="run under the deterministic fault injector with "
+                         "this seed and assert exactly-once completion")
+    ap.add_argument("--chaos-rate", type=float, default=0.25,
+                    help="per-call fault probability for the seeded plan")
     args = ap.parse_args()
 
     if args.router:

@@ -164,6 +164,7 @@ class PlanCache:
         self, g: TaskGraph, comp: np.ndarray, m: Machine, *,
         slot=None, classes=None,
         relax: Callable = ceft_jax.xla_edge_relax,
+        store: bool = True,
     ) -> tuple[CeftResult, str, PlanEntry]:
         """Plan ``(g, comp, m)`` through the fused CSR sweep, reusing as much
         cached work as the actual byte-level deltas allow.
@@ -172,6 +173,10 @@ class PlanCache:
         (the router's nominal vs degraded scenarios, the straggler baseline).
         ``classes`` registers the plan under those workload classes in the
         reverse index, so targeted :meth:`invalidate` calls can find it.
+        ``store=False`` makes the pass TRANSIENT: a miss still reads (and may
+        resume from) the cached entry, but the fresh result is never stored —
+        speculative pricing (the router's hedge re-plan) must not evict or
+        overwrite the plans steady-state ticks are served from.
         Returns ``(result, status, entry)``.
         """
         comp32 = np.ascontiguousarray(comp, np.float32)
@@ -230,7 +235,8 @@ class PlanCache:
                 classes=frozenset(classes) if classes is not None
                 else frozenset(),
             )
-            self._store(k, entry)
+            if store:
+                self._store(k, entry)
             return result, status, entry
 
     def _store(self, k: tuple, entry: PlanEntry) -> None:

@@ -201,6 +201,22 @@ class StragglerMonitor:
         self.ewma[cls] = self.baseline[cls] * float(slowdown)
         return self.slowdowns()
 
+    def report_overdue(self, cls: int,
+                       observed_slowdown: float | None = None) -> np.ndarray:
+        """A deadline-watchdog strike: the engine blew its plan-derived
+        budget.  Registers at least a threshold-tripping slowdown — never
+        *reducing* an already-degraded column, and leaving LOST columns
+        alone — so the very next plan sheds critical-path work off the
+        offender.  Returns the slowdown factors."""
+        cls = int(cls)
+        self.ensure_classes(cls + 1)
+        if self.lost[cls]:
+            return self.slowdowns()
+        want = max(self.threshold, float(self.slowdowns()[cls]))
+        if observed_slowdown is not None:
+            want = max(want, float(observed_slowdown))
+        return self.report(cls, want)
+
     def mark_lost(self, cls: int) -> np.ndarray:
         """A worker died: its class column becomes fully degraded (grows the
         arrays for never-observed classes).  Returns the slowdown factors."""

@@ -9,7 +9,8 @@ from .pool import (
 )
 from .queue import AdmissionQueue, Request, class_mix, workload_class
 from .router import Dispatch, Router, router_machine
-__all__ = ["AdmissionQueue", "Dispatch", "Engine", "EnginePool", "EngineSlot",
-           "Request", "Router", "ServeConfig", "WorkerLost", "WorkerSpec",
-           "class_mix", "null_engine_factory", "router_machine",
-           "smoke_engine_factory", "workload_class"]
+from .watchdog import DeadlineWatchdog
+__all__ = ["AdmissionQueue", "DeadlineWatchdog", "Dispatch", "Engine",
+           "EnginePool", "EngineSlot", "Request", "Router", "ServeConfig",
+           "WorkerLost", "WorkerSpec", "class_mix", "null_engine_factory",
+           "router_machine", "smoke_engine_factory", "workload_class"]

@@ -68,7 +68,8 @@ class _WorkerState:
 
 
 class WorkerLost(RuntimeError):
-    """A worker died (process exit, broken pipe, or an injected loss).
+    """A worker died (process exit, broken pipe, a corrupt protocol frame, or
+    an injected loss).
 
     Carries per-engine context so serve-loop error handling can report which
     pool member failed without string-parsing."""
@@ -78,6 +79,13 @@ class WorkerLost(RuntimeError):
         self.engine_name = name
         self.index = index
         self.cause = cause
+
+
+class FrameError(RuntimeError):
+    """The length-framed pickle stream is corrupt (bad header, truncated
+    body, garbage payload bytes).  The transport cannot resynchronize a
+    corrupt stream, so the worker layer converts this to :class:`WorkerLost`
+    with per-engine context — never a hang, never a raw ``EOFError``."""
 
 
 @dataclasses.dataclass
@@ -120,6 +128,12 @@ def smoke_engine_factory(arch: str, profile: str):
 
 
 # ----------------------------------------------------------------- transport
+# Sanity cap on one frame: a corrupt header decodes to a random 64-bit
+# length; without the cap the reader blocks trying to consume exabytes (a
+# hang), with it the garbage surfaces immediately as FrameError.
+_MAX_FRAME = 1 << 31
+
+
 def _send_msg(fobj, obj) -> None:
     b = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
     fobj.write(struct.pack("<Q", len(b)))
@@ -132,16 +146,30 @@ def _recv_msg(fobj):
     if len(hdr) < 8:
         raise EOFError("pipe closed")
     (n,) = struct.unpack("<Q", hdr)
+    if n > _MAX_FRAME:
+        raise FrameError(f"frame length {n} exceeds cap (corrupt header)")
     b = fobj.read(n)
     if len(b) < n:
-        raise EOFError("pipe closed mid-message")
-    return pickle.loads(b)
+        raise EOFError(f"pipe closed mid-message (truncated frame: "
+                       f"{len(b)}/{n} bytes)")
+    try:
+        return pickle.loads(b)
+    except BaseException as e:
+        raise FrameError(
+            f"corrupt frame payload: {type(e).__name__}: {e}") from e
 
 
 def _worker_main() -> None:  # pragma: no cover - runs in the child process
     """Subprocess worker loop: framed pickle requests on stdin, replies on
     the ORIGINAL stdout (sys.stdout is re-pointed at stderr first, so engine
-    prints cannot corrupt the protocol stream)."""
+    prints cannot corrupt the protocol stream).
+
+    Every request carries a monotonic sequence id and every reply echoes it:
+    the parent matches replies to requests by seq, so a duplicated reply
+    frame (a retransmitting transport, an injected duplicate-reply fault) is
+    dropped as stale instead of desynchronizing the stream.  A corrupt
+    inbound frame is unrecoverable (the stream cannot resync), so the worker
+    exits and the parent sees the EOF as :class:`WorkerLost`."""
     out = sys.stdout.buffer
     sys.stdout = sys.stderr
     inp = sys.stdin.buffer
@@ -149,34 +177,34 @@ def _worker_main() -> None:  # pragma: no cover - runs in the child process
     while True:
         try:
             msg = _recv_msg(inp)
-        except EOFError:
+        except (EOFError, FrameError):
             return
-        op, rest = msg[0], msg[1:]
+        seq, op, rest = msg[0], msg[1], msg[2:]
         try:
             if op == "init":
                 path, args, kwargs = rest
                 mod, _, fn = path.partition(":")
                 engine = getattr(importlib.import_module(mod), fn)(*args, **kwargs)
-                _send_msg(out, ("ok", process_topology()))
+                _send_msg(out, (seq, "ok", process_topology()))
             elif op == "generate":
                 prompts, max_new, eos = rest
                 from .engine import ServeConfig
                 toks = engine.generate(
                     prompts, ServeConfig(max_new_tokens=max_new, eos_id=eos))
-                _send_msg(out, ("ok", np.asarray(toks)))
+                _send_msg(out, (seq, "ok", np.asarray(toks)))
             elif op == "probe":
                 (payload,) = rest
-                _send_msg(out, ("ok", len(payload)))
+                _send_msg(out, (seq, "ok", len(payload)))
             elif op == "ping":
-                _send_msg(out, ("ok", "pong"))
+                _send_msg(out, (seq, "ok", "pong"))
             elif op == "close":
-                _send_msg(out, ("ok", None))
+                _send_msg(out, (seq, "ok", None))
                 return
             else:
-                _send_msg(out, ("err", f"unknown op {op!r}", ""))
+                _send_msg(out, (seq, "err", f"unknown op {op!r}", ""))
         except BaseException as e:  # reply, don't die: the parent decides
             import traceback
-            _send_msg(out, ("err", f"{type(e).__name__}: {e}",
+            _send_msg(out, (seq, "err", f"{type(e).__name__}: {e}",
                             traceback.format_exc()))
 
 
@@ -212,14 +240,24 @@ class _InprocWorker:
 
 
 class _SubprocWorker:
-    """Backend for a worker process on this host, one pipe pair per worker."""
+    """Backend for a worker process on this host, one pipe pair per worker.
+
+    Requests carry monotonic sequence ids; :meth:`_reply_for` matches replies
+    by seq, dropping stale (duplicated / late) reply frames into
+    ``stats["stale_replies"]`` instead of letting them desynchronize the
+    stream, and surfacing truncated or corrupt frames as :class:`WorkerLost`
+    with per-engine context."""
     kind = "subprocess"
 
-    def __init__(self, spec: WorkerSpec, *, index: int, env: dict | None = None):
+    close_timeout = 5.0   # graceful-exit grace before SIGKILL
+
+    def __init__(self, spec: WorkerSpec, *, index: int, env: dict | None = None,
+                 stats: dict | None = None):
         if not spec.factory:
             raise ValueError(f"subprocess worker {spec.name!r} needs a "
                              "'module:callable' factory path")
         self._name, self._index = spec.name, index
+        self.stats = stats if stats is not None else {"stale_replies": 0}
         child_env = dict(os.environ)
         src = str(Path(__file__).resolve().parents[2])
         pp = child_env.get("PYTHONPATH", "")
@@ -229,21 +267,41 @@ class _SubprocWorker:
             [sys.executable, "-c", _CHILD_BOOT], stdin=subprocess.PIPE,
             stdout=subprocess.PIPE, env=child_env)
         self._lock = threading.Lock()
+        self._seq = 0
         self.topology = self._rpc(
             ("init", spec.factory, spec.args, spec.kwargs))
+
+    def _reply_for(self, seq: int):
+        """Read replies until the one matching ``seq``: a LOWER seq is a
+        stale frame (duplicated or late reply) — dropped and counted — while
+        a higher seq means the stream skipped a reply and cannot be trusted."""
+        while True:
+            reply = _recv_msg(self.proc.stdout)
+            if not isinstance(reply, tuple) or len(reply) < 2:
+                raise FrameError(f"malformed reply {type(reply).__name__}")
+            if reply[0] == seq:
+                return reply
+            if isinstance(reply[0], int) and reply[0] < seq:
+                self.stats["stale_replies"] = \
+                    self.stats.get("stale_replies", 0) + 1
+                continue
+            raise FrameError(
+                f"protocol desync: got reply seq {reply[0]!r}, want {seq}")
 
     def _rpc(self, msg):
         with self._lock:
             try:
-                _send_msg(self.proc.stdin, msg)
-                reply = _recv_msg(self.proc.stdout)
-            except (EOFError, BrokenPipeError, OSError) as e:
+                self._seq += 1
+                seq = self._seq
+                _send_msg(self.proc.stdin, (seq,) + msg)
+                reply = self._reply_for(seq)
+            except (EOFError, BrokenPipeError, OSError, FrameError) as e:
                 raise WorkerLost(self._name, self._index,
                                  f"pipe to worker died ({e})") from e
-        if reply[0] == "ok":
-            return reply[1]
+        if reply[1] == "ok":
+            return reply[2]
         raise RuntimeError(
-            f"worker {self._name} failed: {reply[1]}\n{reply[2]}")
+            f"worker {self._name} failed: {reply[2]}\n{reply[3]}")
 
     def generate(self, prompts, scfg):
         return self._rpc(("generate", np.asarray(prompts),
@@ -256,14 +314,33 @@ class _SubprocWorker:
         self._rpc(("ping",))
 
     def close(self) -> None:
+        """Shut the worker down WITHOUT ever blocking forever or leaking:
+        polite close rpc only if the pipe is free (a generate blocked on a
+        hung child holds the lock — trying to rpc under it would deadlock),
+        then wait → SIGKILL → reap, then close both pipe fds.  A hung or
+        SIGSTOP'd child cannot leave a zombie or leaked fds behind across
+        drain + relaunch cycles."""
+        if self._lock.acquire(blocking=False):
+            try:
+                self._seq += 1
+                # fire-and-forget: NEVER read the reply here — a stopped or
+                # hung child would block the read forever, and proc.wait()
+                # below observes the graceful exit anyway
+                _send_msg(self.proc.stdin, (self._seq, "close"))
+            except (BrokenPipeError, OSError, ValueError):
+                pass
+            finally:
+                self._lock.release()
         try:
-            self._rpc(("close",))
-        except (WorkerLost, RuntimeError):
-            pass
-        try:
-            self.proc.wait(timeout=5)
+            self.proc.wait(timeout=self.close_timeout)
         except subprocess.TimeoutExpired:
-            self.proc.kill()
+            self.proc.kill()          # SIGKILL stops even a SIGSTOP'd child
+            self.proc.wait()          # reap: no zombie survives close()
+        for fobj in (self.proc.stdin, self.proc.stdout):
+            try:
+                fobj.close()
+            except Exception:
+                pass
 
 
 @dataclasses.dataclass
@@ -305,7 +382,10 @@ class EnginePool:
                  autoscale: bool = False,
                  high_water: int = 8, low_water: int = 0,
                  machine: Machine | None = None,
-                 child_env: dict | None = None):
+                 child_env: dict | None = None,
+                 relaunch_budget: int = 3,
+                 relaunch_backoff: float = 0.5,
+                 relaunch_backoff_max: float = 30.0):
         self.backend = backend
         self.probe = probe
         self.kv_bw = float(kv_bw)
@@ -318,15 +398,22 @@ class EnginePool:
         self.high_water = int(high_water)
         self.low_water = int(low_water)
         self.child_env = child_env
+        self.relaunch_budget = int(relaunch_budget)
+        self.relaunch_backoff = float(relaunch_backoff)
+        self.relaunch_backoff_max = float(relaunch_backoff_max)
         self._members: list[_PoolMember] = []
         self._listeners: list[Callable] = []
+        self._handle_wrappers: list[Callable] = []
         self._lat_ewma: np.ndarray = np.zeros(0)      # seconds, ping round-trip
         self._leg_ewma: np.ndarray = np.zeros(0)      # tokens/s, transfer leg
         self._machine: Machine | None = None
         self._pinned_machine = machine
         self._autoscaled: list[int] = []
+        self._relaunch_attempts: dict[int, int] = {}
+        self._relaunch_next: dict[int, float] = {}
         self.stats = {"launched": 0, "drained": 0, "lost": 0, "probes": 0,
-                      "scale_out": 0, "scale_in": 0}
+                      "scale_out": 0, "scale_in": 0, "stale_replies": 0,
+                      "relaunches": 0, "relaunch_exhausted": 0}
         for spec in specs:
             self.launch(spec)
 
@@ -376,6 +463,16 @@ class EnginePool:
     def add_listener(self, fn: Callable) -> None:
         self._listeners.append(fn)
 
+    def add_handle_wrapper(self, wrap: Callable) -> None:
+        """Public middleware seam for the worker transport: every current and
+        future handle is replaced by ``wrap(index, handle)``.  The wrapper
+        must expose the handle protocol (generate/probe/ping/close).  This is
+        how tracing or fault injection (``repro.serve.faults``) attaches
+        without touching the pool's private lifecycle state."""
+        self._handle_wrappers.append(wrap)
+        for i, m in enumerate(self._members):
+            m.handle = wrap(i, m.handle)
+
     def _notify(self, event: str, payload) -> None:
         for fn in self._listeners:
             fn(event, payload)
@@ -384,20 +481,31 @@ class EnginePool:
     def _build_handle(self, spec: WorkerSpec, idx: int):
         backend = spec.backend or self.backend
         if backend == "subprocess":
-            return _SubprocWorker(spec, index=idx, env=self.child_env)
-        if backend == "inproc":
-            return _InprocWorker(spec)
-        raise ValueError(f"unknown pool backend {backend!r}")
+            handle = _SubprocWorker(spec, index=idx, env=self.child_env,
+                                    stats=self.stats)
+        elif backend == "inproc":
+            handle = _InprocWorker(spec)
+        else:
+            raise ValueError(f"unknown pool backend {backend!r}")
+        for wrap in self._handle_wrappers:
+            handle = wrap(idx, handle)
+        return handle
 
-    def launch(self, spec: WorkerSpec) -> int:
+    def launch(self, spec: WorkerSpec, idx: int | None = None) -> int:
         """Start a worker.  Freed slots (lost/drained) are revived in place so
         processor-class columns stay index-stable; otherwise a new column is
-        appended.  Returns the worker index."""
+        appended.  ``idx`` targets a specific freed slot (the relaunch path);
+        by default the first freed slot is revived.  Returns the worker
+        index."""
         if not spec.backend:
             spec = dataclasses.replace(spec, backend=self.backend)
         freed = [i for i, m in enumerate(self._members)
                  if m.state != _WorkerState.LIVE]
-        if freed:
+        if idx is not None:
+            if self._members[idx].state == _WorkerState.LIVE:
+                raise ValueError(f"slot {idx} is live; drain it first")
+            self._members[idx] = _PoolMember(spec, self._build_handle(spec, idx))
+        elif freed:
             idx = freed[0]
             self._members[idx] = _PoolMember(spec, self._build_handle(spec, idx))
         else:
@@ -442,6 +550,49 @@ class EnginePool:
     def close(self) -> None:
         for i in self.live_indices():
             self.drain(i)
+
+    # -------------------------------------------------------------- relaunch
+    def relaunchable(self) -> list[int]:
+        """Lost slots still inside their relaunch budget."""
+        return [i for i, m in enumerate(self._members)
+                if m.state == _WorkerState.LOST
+                and self._relaunch_attempts.get(i, 0) < self.relaunch_budget]
+
+    def maybe_relaunch(self, idx: int, now: float | None = None) -> bool:
+        """Try to revive one lost slot from its own spec, under a bounded
+        exponential backoff and a hard per-slot attempt budget: a
+        crash-looping worker costs at most ``relaunch_budget`` relaunches,
+        then converges to permanently-degraded (its column stays LOST, the
+        degraded re-plan keeps routing around it) instead of flapping the
+        machine fingerprint on every crash cycle."""
+        m = self._members[idx]
+        if m.state != _WorkerState.LOST:
+            return False
+        attempts = self._relaunch_attempts.get(idx, 0)
+        if attempts >= self.relaunch_budget:
+            return False
+        now = time.monotonic() if now is None else now
+        if now < self._relaunch_next.get(idx, 0.0):
+            return False
+        self._relaunch_attempts[idx] = attempts + 1
+        self._relaunch_next[idx] = now + min(
+            self.relaunch_backoff * (2.0 ** attempts),
+            self.relaunch_backoff_max)
+        if self._relaunch_attempts[idx] >= self.relaunch_budget:
+            self.stats["relaunch_exhausted"] += 1
+        try:
+            self.launch(dataclasses.replace(m.spec), idx=idx)
+        except Exception:
+            # the relaunch itself crashed (factory raised, spawn failed):
+            # that consumed one budgeted attempt; the slot stays lost
+            self._members[idx].state = _WorkerState.LOST
+            return False
+        self.stats["relaunches"] += 1
+        return True
+
+    def maybe_relaunch_lost(self, now: float | None = None) -> list[int]:
+        """Attempt every budget-eligible lost slot; returns revived indices."""
+        return [i for i in self.relaunchable() if self.maybe_relaunch(i, now)]
 
     # -------------------------------------------------------------- dispatch
     def generate(self, idx: int, prompts, scfg):

@@ -22,6 +22,19 @@ import numpy as np
 
 _IDS = itertools.count()
 
+# Dispatch-attempt sequence ids, monotonic process-wide.  Every attempt to
+# serve a request — the original dispatch, a hedged re-dispatch, a requeue's
+# re-dispatch — draws a fresh seq here, and completion is first-attempt-wins:
+# a later reply for an already-completed request is dropped as stale (counted
+# in stats["stale_replies"]) instead of double-completing it.  Single owner so
+# router- and pool-level attempt ids can never collide.
+_ATTEMPTS = itertools.count(1)
+
+
+def next_seq() -> int:
+    """A fresh dispatch-attempt sequence id (monotonic, never reused)."""
+    return next(_ATTEMPTS)
+
 
 def _pow2ceil(x: int) -> int:
     """Smallest power of two >= x (>= 1)."""

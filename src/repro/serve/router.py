@@ -50,7 +50,8 @@ from ..sched.plancache import PlanCache, machine_fingerprint
 from ..sched.straggler import EwmaCostTable, StragglerMonitor
 from .engine import ServeConfig
 from .pool import EnginePool, EngineSlot, WorkerLost
-from .queue import AdmissionQueue, Request, class_mix
+from .queue import AdmissionQueue, Request, class_mix, next_seq
+from .watchdog import DeadlineWatchdog, InflightEntry
 
 
 @dataclasses.dataclass
@@ -90,7 +91,10 @@ class Router:
                  default_rate: float = 1e-3, max_batch: int = 8,
                  latency_slack: float = 1.0, straggler_threshold: float = 1.3,
                  plancache: PlanCache | None = None,
-                 tick_budget: int | None = None):
+                 tick_budget: int | None = None,
+                 deadline_factor: float | None = None, hedge: bool = True,
+                 min_deadline: float = 0.05, wd_poll: float = 0.01,
+                 watchdog: DeadlineWatchdog | None = None):
         if not isinstance(pool, EnginePool):
             if not pool:
                 raise ValueError("router needs at least one engine slot")
@@ -126,8 +130,28 @@ class Router:
         self.stats = {"plans": 0, "degraded_plans": 0, "dispatches": 0,
                       "coalesced": 0, "split": 0, "shed": 0, "ticks": 0,
                       "cache_hits": 0, "invalidations": 0,
-                      "partial_sweeps": 0, "resident": 0, "requeued": 0}
+                      "partial_sweeps": 0, "resident": 0, "requeued": 0,
+                      "overdue": 0, "overdue_cp": 0, "hedges": 0,
+                      "stale_replies": 0, "completions": 0,
+                      "watchdog_lost": 0}
         self.failures: list[tuple[str, BaseException]] = []
+        # deadline watchdog (None = disarmed: serve() is the plain PR 7 loop).
+        # deadline_factor arms it: every dispatch carries a deadline derived
+        # from its planned span under the current cost table x slowdowns, and
+        # the monitor thread escalates overdue attempts (hedge / report /
+        # requeue / mark_lost -- see _on_overdue).
+        self.hedge = bool(hedge)
+        self.watchdog = watchdog
+        if self.watchdog is None and deadline_factor is not None:
+            self.watchdog = DeadlineWatchdog(
+                deadline_factor=float(deadline_factor),
+                min_deadline=float(min_deadline), poll_interval=float(wd_poll))
+        if self.watchdog is not None:
+            self.watchdog.on_overdue = self._on_overdue
+        self._serve_lock = threading.Lock()
+        self._serve_done: dict[int, np.ndarray] | None = None
+        self._wd_requeue: list[Dispatch] = []
+        self._hedge_threads: list[threading.Thread] = []
         self.last_plan: CeftResult | None = None
         self.last_nominal: CeftResult | None = None
         self.last_dag: tuple | None = None
@@ -416,19 +440,182 @@ class Router:
         return {r.rid: toks[b, : plen + int(r.max_new)]
                 for b, r in enumerate(d.requests)}
 
-    def _requeue(self, ds: list[Dispatch]) -> None:
+    def _requeue(self, ds: list[Dispatch],
+                 done: dict[int, np.ndarray] | None = None) -> None:
         """Put un-served dispatches back at the FRONT of their resident
-        queues (FIFO order preserved) so the next tick re-plans them."""
+        queues (FIFO order preserved) so the next tick re-plans them.
+        ``done`` filters out requests another attempt (a hedge, a recovered
+        original) already completed — re-serving those would waste work and
+        break the exactly-once accounting."""
         for d in ds:
+            reqs = (d.requests if done is None
+                    else [r for r in d.requests if r.rid not in done])
+            if not reqs:
+                continue
             q = self.resident.setdefault(d.wclass, deque())
-            for r in reversed(d.requests):
+            for r in reversed(reqs):
                 q.appendleft(r)
-            self.stats["requeued"] += len(d.requests)
+            self.stats["requeued"] += len(reqs)
         self.stats["resident"] = sum(len(q) for q in self.resident.values())
+
+    # ------------------------------------------------------- deadline watchdog
+    def planned_span(self, d: Dispatch) -> float:
+        """Expected service seconds for one micro-batch under the current
+        cost table x straggler slowdowns — the same numbers its plan was
+        priced with, so the watchdog enforces exactly what the plan
+        promised.  The slowdown factor is capped: a monitor-degraded (or
+        LOST-column) engine would otherwise inflate the budget toward
+        infinity and disarm the watchdog exactly when it matters most."""
+        rate = float(self.costs.row(d.wclass)[d.engine])
+        slow = float(self._slow[d.engine]) if d.engine < len(self._slow) else 1.0
+        return (rate * min(slow, 10.0)
+                * len(d.requests) * (d.wclass[0] + d.wclass[1]))
+
+    def _complete(self, d: Dispatch, out: dict[int, np.ndarray]) -> None:
+        """First-attempt-wins completion: a rid already completed (by the
+        hedge or the original, whichever returned first) has its late
+        duplicate dropped and counted, never overwritten."""
+        with self._serve_lock:
+            if self._serve_done is None:
+                return
+            for rid, toks in out.items():
+                if rid in self._serve_done:
+                    self.stats["stale_replies"] += 1
+                else:
+                    self._serve_done[rid] = toks
+                    self.stats["completions"] += 1
+
+    def _on_overdue(self, entry: InflightEntry, now: float) -> None:
+        """Watchdog callback — the escalation ladder, one rung per strike:
+
+        1. report the offender to the straggler monitor (its column trips
+           the threshold, so the next plan sheds work off it) and, for a
+           critical-path dispatch with hedging on, speculatively re-send to
+           the degraded plane's best alternate;
+        2. requeue the dispatch — the next tick re-plans it elsewhere
+           (first result wins; the stuck original is dropped as stale);
+        3. the worker is treated as hung for good: mark_lost degrades its
+           column and the entry leaves the watchdog.
+
+        Runs on the monitor thread: it only touches the serve lock and the
+        pool/monitor's own synchronized entry points; tick-side state (the
+        resident queues) is reached via the ``_wd_requeue`` hand-off list
+        drained on the serve thread."""
+        d: Dispatch = entry.payload
+        self.stats["overdue"] += 1
+        if entry.on_critical_path:
+            self.stats["overdue_cp"] += 1
+        if entry.strikes == 1:
+            self.monitor.report_overdue(entry.engine)
+            self.stats["invalidations"] += self.plancache.invalidate(
+                engine=entry.engine)
+            self._plan_sig = None
+            if entry.on_critical_path and self.hedge and not entry.hedged:
+                entry.hedged = True
+                self._launch_hedge(entry)
+        elif entry.strikes == 2:
+            with self._serve_lock:
+                self._wd_requeue.append(d)
+        else:
+            self.stats["watchdog_lost"] += 1
+            self.watchdog.disarm(entry.seq)
+            try:
+                self.pool.mark_lost(
+                    entry.engine,
+                    f"watchdog: overdue past {entry.strikes} deadline budgets")
+            except Exception:
+                pass
+
+    def _hedge_target(self, d: Dispatch) -> int | None:
+        """The engine the batched degraded plane names as the best alternate
+        for this dispatch's class — the same nominal+degraded re-plan the
+        pool-loss path uses, re-priced with the offender's column degraded
+        to LOST, run through a TRANSIENT (store=False) cache pass so hedge
+        pricing can never poison the cached tick plans."""
+        live = set(self.pool.live_indices())
+        live.discard(d.engine)
+        if not live:
+            return None
+        if self.last_dag is not None and self.last_groups is not None:
+            try:
+                n, src, dst, data, comp_nominal = self.last_dag
+                slow = np.array(self._slow, np.float64, copy=True)
+                if d.engine < len(slow):
+                    slow[d.engine] = max(slow[d.engine], 1e6)
+                comp = comp_nominal * slow[None, :]
+                g = request_graph(n, src, dst, data)
+                res, _, _ = self.plancache.plan(
+                    g, comp, self._m_snapshot, slot="router-hedge",
+                    classes=[wc for wc, _ in self.last_groups], store=False)
+                alt = res.assignment.get(d.node_decode,
+                                         res.assignment.get(d.node_prefill))
+                if alt is not None and int(alt) in live:
+                    return int(alt)
+                # the degraded path moved off this class entirely: take the
+                # earliest-finish live engine for the decode vertex instead
+                for c in np.argsort(res.ceft[d.node_decode]):
+                    if int(c) in live:
+                        return int(c)
+            except Exception:
+                pass
+        return self._fallback_target(d, live)
+
+    def _fallback_target(self, d: Dispatch, live: set[int]) -> int | None:
+        """Rate-based alternate when no planned DAG is available (first-tick
+        races): cheapest live engine for the class under current slowdowns."""
+        if not live:
+            return None
+        row = self.costs.row(d.wclass)
+        row = row * self._slow[: len(row)]
+        for c in np.argsort(row):
+            if int(c) in live:
+                return int(c)
+        return next(iter(live))
+
+    def _launch_hedge(self, entry: InflightEntry) -> None:
+        """Speculatively re-send an overdue critical-path dispatch to the
+        degraded plane's best alternate.  First result wins via _complete's
+        rid dedup; the hedge itself is armed on the watchdog (off-path, so
+        it can never hedge recursively) and its failure requeues instead of
+        raising — the original attempt (or a later requeue) still owns the
+        requests."""
+        d: Dispatch = entry.payload
+        alt = self._hedge_target(d)
+        if alt is None:
+            return
+        clone = dataclasses.replace(d, engine=int(alt))
+        self.stats["hedges"] += 1
+
+        def run():
+            seq = next_seq()
+            self.watchdog.arm(seq, clone, planned_span=self.planned_span(clone),
+                              engine=clone.engine, on_critical_path=False)
+            try:
+                out = self.run_dispatch(clone)
+            except BaseException:
+                with self._serve_lock:
+                    self._wd_requeue.append(clone)
+                return
+            finally:
+                self.watchdog.disarm(seq)
+            self._complete(clone, out)
+
+        t = threading.Thread(target=run, name=f"hedge-{alt}", daemon=True)
+        self._hedge_threads.append(t)
+        t.start()
 
     def serve(self, max_ticks: int = 64) -> dict[int, np.ndarray]:
         """Tick until the queue AND residents are empty (or max_ticks): the
-        launcher's loop.
+        launcher's loop.  Disarmed (no watchdog) this IS the historical loop
+        — byte-for-byte the PR 7 behaviour; armed it adds deadline
+        enforcement around the identical planning pipeline (tick() is
+        untouched, so armed-no-fault plans stay bit-identical)."""
+        if self.watchdog is None:
+            return self._serve_plain(max_ticks)
+        return self._serve_watched(max_ticks)
+
+    def _serve_plain(self, max_ticks: int = 64) -> dict[int, np.ndarray]:
+        """The disarmed serve loop (the historical code path).
 
         Each tick's micro-batches execute on one worker thread *per engine*
         (each engine runs its own dispatches in planned order): the CEFT
@@ -503,4 +690,138 @@ class Router:
                                 for name, e in errors))
                 agg.failures = list(errors)   # originals, per-engine context
                 raise agg from errors[0][1]
+        return done
+
+    def _serve_watched(self, max_ticks: int = 64) -> dict[int, np.ndarray]:
+        """The armed serve loop: the same admit/plan/dispatch pipeline as
+        the plain loop, with every dispatch armed on the deadline watchdog
+        and completion made first-attempt-wins (rid dedup in _complete).
+
+        Fault-containment differences from the plain loop:
+
+        * every attempt carries ``deadline_factor x planned_span``; overdue
+          attempts walk the _on_overdue ladder (report+hedge / requeue /
+          mark_lost),
+        * engine worker threads are joined with a CAPPED timeout — a thread
+          stuck in an unreleasable hang is abandoned (daemon), its
+          un-completed dispatches requeued and already counted toward the
+          offender's strikes, instead of blocking serve forever,
+        * budget-eligible lost workers are relaunched each tick through the
+          pool's bounded exponential backoff.
+        """
+        wd = self.watchdog
+        with self._serve_lock:
+            self._serve_done = {}
+            self._wd_requeue = []
+        wd.start()
+        max_budget = wd.min_deadline
+        try:
+            for _ in range(max_ticks):
+                with self._serve_lock:
+                    pending_wd, self._wd_requeue = self._wd_requeue, []
+                    done_view = dict(self._serve_done)
+                self._requeue(pending_wd, done=done_view)
+                self.pool.maybe_relaunch_lost()
+                if not len(self.queue) and not self.resident:
+                    # queue drained: wait out in-flight attempts (hedges,
+                    # abandoned originals) — their completions land in
+                    # _serve_done, their strikes may still requeue work
+                    t_end = time.monotonic() + 1.0 + 4.0 * max_budget
+                    while wd.inflight() and time.monotonic() < t_end:
+                        time.sleep(min(wd.poll_interval, 0.01))
+                    with self._serve_lock:
+                        pending_wd, self._wd_requeue = self._wd_requeue, []
+                        done_view = dict(self._serve_done)
+                    self._requeue(pending_wd, done=done_view)
+                    if not len(self.queue) and not self.resident:
+                        break
+                    continue
+                if not self.pool.live_indices():
+                    agg = RuntimeError(
+                        f"no live pool workers remain ({len(self.failures)} "
+                        "lost): "
+                        + "; ".join(f"{name}: {type(e).__name__}: {e}"
+                                    for name, e in self.failures))
+                    agg.failures = list(self.failures)
+                    raise agg
+                errors: list[tuple[str, BaseException]] = []
+                lost: list[tuple[str, WorkerLost, list[Dispatch]]] = []
+                lock = threading.Lock()
+                per_engine: dict[int, list[Dispatch]] = {}
+                for d in self.tick():
+                    per_engine.setdefault(d.engine, []).append(d)
+                for ds in per_engine.values():
+                    for d in ds:
+                        max_budget = max(max_budget,
+                                         wd.budget(self.planned_span(d)))
+                progress = {eng: 0 for eng in per_engine}
+
+                def worker(eng: int, name: str, ds: list[Dispatch]):
+                    for i, d in enumerate(ds):
+                        seq = next_seq()
+                        wd.arm(seq, d, planned_span=self.planned_span(d),
+                               engine=eng,
+                               on_critical_path=d.on_critical_path)
+                        try:
+                            out = self.run_dispatch(d)
+                        except WorkerLost as e:
+                            with lock:
+                                lost.append((name, e, ds[i:]))
+                                progress[eng] = len(ds)  # loss path requeues
+                            return
+                        except BaseException as e:
+                            with lock:
+                                errors.append((name, e))
+                                progress[eng] = len(ds)
+                            return
+                        finally:
+                            wd.disarm(seq)
+                        self._complete(d, out)
+                        with lock:
+                            progress[eng] = i + 1
+
+                threads = [(eng, threading.Thread(
+                                target=worker,
+                                args=(eng, self.slots[eng].name, ds),
+                                daemon=True))
+                           for eng, ds in per_engine.items()]
+                for _, t in threads:
+                    t.start()
+                # capped join: long enough for every planned span plus the
+                # full three-strike ladder, short enough that an
+                # unreleasable hang cannot wedge the loop
+                deadline = time.monotonic() + 1.0 + 4.0 * max_budget
+                for eng, t in threads:
+                    t.join(timeout=max(0.0, deadline - time.monotonic()))
+                    if t.is_alive():
+                        # abandon the stuck thread (daemon; a late result is
+                        # deduped by rid) and take back its unfinished work
+                        with lock:
+                            done_at = progress[eng]
+                        name = self.slots[eng].name
+                        e = WorkerLost(name, eng, "hung past join deadline")
+                        with lock:
+                            lost.append((name, e, per_engine[eng][done_at:]))
+                        try:
+                            self.pool.mark_lost(eng, "hung past join deadline")
+                        except Exception:
+                            pass
+                with self._serve_lock:
+                    done_view = dict(self._serve_done)
+                for name, e, pending in lost:
+                    self.failures.append((name, e))
+                    self._requeue(pending, done=done_view)
+                if errors:
+                    if len(errors) == 1:
+                        raise errors[0][1]
+                    agg = RuntimeError(
+                        f"{len(errors)} engines failed concurrently: "
+                        + "; ".join(f"{name}: {type(e).__name__}: {e}"
+                                    for name, e in errors))
+                    agg.failures = list(errors)
+                    raise agg from errors[0][1]
+        finally:
+            wd.stop()
+        with self._serve_lock:
+            done, self._serve_done = self._serve_done, None
         return done

@@ -261,3 +261,26 @@ def test_graph_store_returns_same_object_for_equal_arrays():
     r1 = PC.device_state(g1)
     r2 = PC.device_state(g2)
     assert r1[0] is r2[0]
+
+
+def test_store_false_pass_is_transient_and_cannot_poison_cache():
+    """ISSUE 8: a speculative pricing pass (the router's hedge re-plan) with
+    store=False returns a correct fresh result but never evicts or
+    overwrites the cached entry the steady-state ticks are served from."""
+    rng = np.random.default_rng(9)
+    g, _ = _layered_graph(rng)
+    m = _machine()
+    comp = rng.uniform(1, 10, (g.n, m.P))
+    pc = PlanCache()
+    res0, status0, entry0 = pc.plan(g, comp, m, slot="router")
+    assert status0 == "full"
+    # transient pass with a DIFFERENT plane into the same slot key
+    hedged = comp.copy()
+    hedged[:, 0] *= 1e6                      # price class 0 as lost
+    res1, _, entry1 = pc.plan(g, hedged, m, slot="router", store=False)
+    _assert_bit_identical(res1, ceft_jax_csr(g, hedged, m))
+    assert entry1 is not entry0
+    # the cached entry is untouched: the original plane still HITS
+    res2, status2, entry2 = pc.plan(g, comp, m, slot="router")
+    assert status2 == "hit" and entry2 is entry0
+    _assert_bit_identical(res2, res0)

@@ -395,3 +395,148 @@ def test_subprocess_pool_end_to_end():
     serve loop — run through the shared isolated-script bootstrap (the same
     helper the elastic-reshard test uses)."""
     run_isolated_script(POOL_E2E, marker="POOL_OK", timeout=300)
+
+
+# ------------------------------------------- shutdown + protocol (ISSUE 8)
+def test_close_escalates_sigkill_on_stopped_child_and_reaps():
+    """Regression (ISSUE 8 satellite): close() on a SIGSTOP'd child must
+    escalate to SIGKILL, reap the process (no zombie) and close both pipe
+    fds — a hung worker cannot leak across drain+relaunch cycles."""
+    pool = EnginePool(
+        [WorkerSpec("w0", factory="repro.serve.pool:null_engine_factory",
+                    backend="subprocess")])
+    handle = pool._members[0].handle
+    handle.close_timeout = 0.3          # keep the graceful grace short
+    pid = pool.worker_pid(0)
+    os.kill(pid, signal.SIGSTOP)        # the child can never reply or exit
+    t0 = time.monotonic()
+    pool.drain(0)                       # -> handle.close()
+    assert time.monotonic() - t0 < 5.0, "close blocked on a stopped child"
+    assert handle.proc.returncode is not None, "child was not reaped"
+    assert handle.proc.returncode < 0   # killed by signal, not clean exit
+    assert handle.proc.stdin.closed and handle.proc.stdout.closed
+    # reaped: the pid no longer exists (or is at worst a different process)
+    with pytest.raises(ProcessLookupError):
+        os.kill(pid, 0)
+
+
+def test_recv_msg_rejects_malformed_frames():
+    """Satellite (ISSUE 8): garbage fed straight into the framing layer must
+    surface as typed errors (FrameError / EOFError), never a hang or a
+    misparse."""
+    import io
+
+    from repro.serve.pool import FrameError, _recv_msg, _send_msg
+
+    # short header -> EOF
+    with pytest.raises(EOFError, match="pipe closed"):
+        _recv_msg(io.BytesIO(b"\x01\x02"))
+    # absurd length header (random corrupt bytes) -> FrameError via the cap
+    with pytest.raises(FrameError, match="exceeds cap"):
+        _recv_msg(io.BytesIO(b"\xde\xad\xbe\xef\xde\xad\xbe\xef"))
+    # valid header, truncated body -> EOF with byte counts
+    import struct
+    with pytest.raises(EOFError, match="truncated frame: 3/9"):
+        _recv_msg(io.BytesIO(struct.pack("<Q", 9) + b"abc"))
+    # full-length garbage payload -> FrameError, not a raw pickle error
+    with pytest.raises(FrameError, match="corrupt frame payload"):
+        _recv_msg(io.BytesIO(struct.pack("<Q", 4) + b"\x00\x01\x02\x03"))
+    # a well-formed frame still round-trips
+    buf = io.BytesIO()
+    _send_msg(buf, ("ok", 42))
+    buf.seek(0)
+    assert _recv_msg(buf) == ("ok", 42)
+
+
+def test_corrupt_stream_surfaces_as_worker_lost_with_context():
+    """Satellite (ISSUE 8): a corrupt protocol stream (garbage written into
+    the live pipe) surfaces as WorkerLost naming the engine — not a hang,
+    not a raw EOFError."""
+    pool = EnginePool(
+        [WorkerSpec("w0", factory="repro.serve.pool:null_engine_factory",
+                    backend="subprocess")])
+    try:
+        handle = pool._members[0].handle
+        handle.proc.stdin.write(b"\xde\xad\xbe\xef" * 4)
+        handle.proc.stdin.flush()
+        with pytest.raises(WorkerLost, match="w0"):
+            pool.generate(0, np.ones((1, 4), np.int32),
+                          ServeConfig(max_new_tokens=2))
+        assert pool.state(0) == "lost"
+    finally:
+        pool.close()
+
+
+def test_reply_matching_drops_stale_lower_seq_frames():
+    """Satellite (ISSUE 8): the parent matches replies by sequence id — a
+    duplicated/late reply frame (lower seq) is dropped and counted, a
+    skipped-ahead seq is a desync and raises."""
+    import io
+
+    from repro.serve.pool import FrameError, _SubprocWorker, _send_msg
+
+    w = object.__new__(_SubprocWorker)
+    w.stats = {"stale_replies": 0}
+    w.proc = type("P", (), {})()
+    buf = io.BytesIO()
+    _send_msg(buf, (1, "ok", "stale"))      # duplicate of an old reply
+    _send_msg(buf, (1, "ok", "stale2"))     # ...twice
+    _send_msg(buf, (3, "ok", "fresh"))
+    buf.seek(0)
+    w.proc.stdout = buf
+    assert w._reply_for(3) == (3, "ok", "fresh")
+    assert w.stats["stale_replies"] == 2
+    buf2 = io.BytesIO()
+    _send_msg(buf2, (9, "ok", "from the future"))
+    buf2.seek(0)
+    w.proc.stdout = buf2
+    with pytest.raises(FrameError, match="protocol desync"):
+        w._reply_for(4)
+
+
+# ------------------------------------------------- relaunch budget (ISSUE 8)
+def test_relaunch_budget_backoff_and_exhaustion():
+    """Tentpole (ISSUE 8): a crash-looping worker is relaunched under
+    bounded exponential backoff at most relaunch_budget times, then
+    converges to permanently-degraded (stays LOST, column routed around)."""
+    pool = EnginePool.from_slots(_slots(2), relaunch_budget=2,
+                                 relaunch_backoff=10.0)
+    pool.mark_lost(0)
+    assert pool.relaunchable() == [0]
+    assert pool.maybe_relaunch(0, now=0.0)          # attempt 1: immediate
+    assert pool.live_indices() == [0, 1]
+    assert pool.stats["relaunches"] == 1
+    pool.mark_lost(0)
+    assert not pool.maybe_relaunch(0, now=5.0)      # inside backoff window
+    assert pool.state(0) == "lost"
+    assert pool.maybe_relaunch(0, now=25.0)         # attempt 2 (= budget)
+    assert pool.stats["relaunch_exhausted"] == 1
+    pool.mark_lost(0)
+    assert pool.relaunchable() == []                # budget spent
+    assert not pool.maybe_relaunch(0, now=1e9)
+    assert pool.state(0) == "lost"                  # permanently degraded
+    assert pool.live_indices() == [1]
+
+
+def test_failed_relaunch_consumes_budget_and_stays_lost():
+    # build the pool around a live fake, then make its spec unbuildable
+    pool2 = EnginePool.from_slots(_slots(1), relaunch_budget=1)
+    pool2._members[0].spec = WorkerSpec("w0", factory="nosuch.module:nothing")
+    pool2.mark_lost(0)
+    assert not pool2.maybe_relaunch(0, now=0.0)     # factory import fails
+    assert pool2.state(0) == "lost"
+    assert pool2.stats["relaunches"] == 0
+    assert pool2.relaunchable() == []               # the attempt was spent
+
+
+def test_router_serve_relaunches_lost_worker_between_ticks():
+    """The armed serve loop revives budget-eligible lost slots each tick."""
+    pool = EnginePool.from_slots(_slots(2), relaunch_backoff=0.01)
+    router = Router(pool, deadline_factor=50.0, min_deadline=10.0)
+    pool.mark_lost(1)
+    rng = np.random.default_rng(31)
+    _submit_mixed(router, rng, per_class=2)
+    done = router.serve(max_ticks=50)
+    assert len(done) == 4
+    assert pool.stats["relaunches"] >= 1
+    assert pool.live_indices() == [0, 1]

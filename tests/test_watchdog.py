@@ -1,0 +1,225 @@
+"""Plan-derived deadline watchdog + hedged re-dispatch (ISSUE 8): strike
+escalation with an injected clock, armed-but-quiet bit-identity to the
+disarmed router, the escalation ladder end-to-end on a hanging worker, and
+stale-reply rejection when a hedged original recovers late."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.sched.straggler import LOST_SLOWDOWN, StragglerMonitor
+from repro.serve import (
+    DeadlineWatchdog,
+    EnginePool,
+    EngineSlot,
+    Request,
+    Router,
+)
+from repro.serve.faults import FaultInjector, FaultPlan
+from repro.serve.watchdog import InflightEntry
+
+
+class FakeEngine:
+    def __init__(self):
+        self.calls = []
+
+    def generate(self, prompts, scfg):
+        B, P = prompts.shape
+        self.calls.append((B, P))
+        return np.full((B, P + scfg.max_new_tokens), 7, np.int32)
+
+
+class HangingEngine(FakeEngine):
+    """Hangs (until ``release``) on its first call, then serves normally —
+    the unreachable-worker case the watchdog exists for."""
+
+    def __init__(self):
+        super().__init__()
+        self.release = threading.Event()
+
+    def generate(self, prompts, scfg):
+        first = not self.calls
+        out = super().generate(prompts, scfg)
+        if first:
+            self.release.wait(timeout=30.0)
+        return out
+
+
+def _slots(P, engines=None):
+    engines = engines or [FakeEngine() for _ in range(P)]
+    return [EngineSlot(f"e{i}", e, "baseline") for i, e in enumerate(engines)]
+
+
+def _submit(router, rng, per_class=4, classes=(8, 16), max_new=4):
+    rids = []
+    for t, plen in enumerate(classes):
+        for _ in range(per_class):
+            r = Request(f"t{t}", rng.integers(2, 100, plen).astype(np.int32),
+                        max_new)
+            assert router.submit(r)
+            rids.append(r.rid)
+    return rids
+
+
+# ----------------------------------------------------------- watchdog unit
+def test_budget_is_floor_clamped():
+    wd = DeadlineWatchdog(deadline_factor=3.0, min_deadline=0.05)
+    assert wd.budget(1.0) == pytest.approx(3.0)
+    # microsecond smoke spans must not turn timer noise into false alarms
+    assert wd.budget(1e-6) == pytest.approx(0.05)
+
+
+def test_sweep_strikes_once_per_budget_with_injected_clock():
+    t = [0.0]
+    fired: list[tuple[int, int]] = []
+    wd = DeadlineWatchdog(deadline_factor=2.0, min_deadline=0.0,
+                          clock=lambda: t[0],
+                          on_overdue=lambda e, now: fired.append(
+                              (e.seq, e.strikes)))
+    e = wd.arm(1, "payload", planned_span=1.0, engine=0,
+               on_critical_path=True)
+    assert isinstance(e, InflightEntry) and e.deadline == pytest.approx(2.0)
+    t[0] = 1.9
+    assert wd.sweep() == []                    # inside budget: quiet
+    t[0] = 2.1
+    assert [x.seq for x in wd.sweep()] == [1]  # strike 1
+    t[0] = 2.2
+    assert wd.sweep() == []                    # pushed deadline: one strike
+    t[0] = 4.2                                 # ...per budget, not per poll
+    assert [x.strikes for x in wd.sweep()] == [2]
+    assert fired == [(1, 1), (1, 2)]
+    assert wd.disarm(1) is e and wd.inflight() == 0
+    t[0] = 99.0
+    assert wd.sweep() == []                    # disarmed entries never fire
+    assert wd.stats["armed"] == 1 and wd.stats["completed"] == 1
+    assert wd.stats["overdue"] == 2
+    assert wd.disarm(1) is None                # idempotent
+
+
+def test_monitor_thread_fires_on_real_clock():
+    fired = threading.Event()
+    wd = DeadlineWatchdog(deadline_factor=1.0, min_deadline=0.01,
+                          poll_interval=0.005,
+                          on_overdue=lambda e, now: fired.set())
+    wd.arm(1, None, planned_span=0.0, engine=0, on_critical_path=False)
+    wd.start()
+    try:
+        assert fired.wait(timeout=2.0), "monitor thread never swept"
+    finally:
+        wd.stop()
+    assert wd.stats["sweeps"] >= 1
+
+
+def test_report_overdue_trips_threshold_monotonically():
+    mon = StragglerMonitor(3, threshold=1.3)
+    mon.observe(np.ones(3))
+    slow = mon.report_overdue(1)
+    assert slow[1] == pytest.approx(1.3)       # at least the threshold
+    slow = mon.report_overdue(1, 2.5)
+    assert slow[1] == pytest.approx(2.5)
+    slow = mon.report_overdue(1, 1.1)          # never REDUCES degradation
+    assert slow[1] == pytest.approx(2.5)
+    mon.mark_lost(2)
+    slow = mon.report_overdue(2)               # lost columns stay lost
+    assert slow[2] >= LOST_SLOWDOWN
+
+
+# ------------------------------------------------- armed-but-quiet identity
+def test_armed_router_plans_bit_identical_when_no_faults():
+    """Acceptance (ISSUE 8): with the watchdog armed but nothing overdue,
+    plans and dispatch decisions on a fixed snapshot are bit-identical to
+    the disarmed (PR 7) router — tick() is untouched by the watchdog."""
+    results = []
+    for armed in (False, True):
+        router = Router(_slots(2),
+                        deadline_factor=50.0 if armed else None,
+                        min_deadline=10.0)
+        rng = np.random.default_rng(21)
+        for wc in ((8, 4), (16, 4)):
+            for e in range(2):
+                router.costs.update(wc, e, float(rng.uniform(0.5e-3, 3e-3)))
+        _submit(router, rng)
+        ds = router.tick()
+        results.append((router, [(d.engine, d.wclass, len(d.requests),
+                                  d.on_critical_path) for d in ds]))
+    (r_plain, seq_plain), (r_armed, seq_armed) = results
+    assert seq_plain == seq_armed
+    assert np.array_equal(r_plain.last_plan.ceft, r_armed.last_plan.ceft)
+    assert r_plain.last_plan.path == r_armed.last_plan.path
+    assert r_plain.last_plan.assignment == r_armed.last_plan.assignment
+
+
+def test_armed_serve_quiet_completes_with_zero_overdue():
+    router = Router(_slots(2), deadline_factor=50.0, min_deadline=10.0)
+    rng = np.random.default_rng(22)
+    rids = _submit(router, rng)
+    done = router.serve()
+    assert set(done) == set(rids)
+    assert router.stats["overdue"] == 0
+    assert router.stats["hedges"] == 0
+    assert router.stats["completions"] == len(rids)
+    assert router.watchdog.stats["armed"] == router.stats["dispatches"]
+    assert router.watchdog.inflight() == 0
+
+
+# --------------------------------------------------------- escalation ladder
+def test_hanging_worker_walks_ladder_hedge_requeue_lost():
+    """Acceptance (ISSUE 8 tentpole): a hung critical-path worker is hedged
+    to the degraded plane's alternate (strike 1), its work requeued (strike
+    2), and the worker marked lost (strike 3) — every admitted request still
+    completes exactly once, and hedge work stays bounded by the overdue
+    critical-path dispatch count."""
+    hanging = HangingEngine()
+    engines = [hanging, FakeEngine()]
+    pool = EnginePool.from_slots(_slots(2, engines), relaunch_budget=0)
+    router = Router(pool, deadline_factor=3.0, min_deadline=0.05,
+                    wd_poll=0.005, max_batch=8)
+    # e0 is the cheap engine: the critical path pins there, so the hang is
+    # genuinely a critical-path stall
+    for wc in ((8, 4), (16, 4)):
+        router.costs.update(wc, 0, 1e-3)
+        router.costs.update(wc, 1, 2e-3)
+    rng = np.random.default_rng(23)
+    rids = _submit(router, rng)
+    try:
+        done = router.serve(max_ticks=200)
+    finally:
+        hanging.release.set()
+    assert set(done) == set(rids), "every admitted request completes"
+    assert router.stats["completions"] == len(rids)      # exactly once
+    assert router.stats["overdue_cp"] >= 1
+    assert 1 <= router.stats["hedges"] <= router.stats["overdue_cp"]
+    assert router.stats["watchdog_lost"] >= 1
+    assert pool.state(0) == "lost"                       # strike 3 fired
+    assert len(engines[1].calls) >= 1                    # survivors served
+    # repeat offender was report()ed: its column is degraded or lost
+    assert router.monitor.slowdowns()[0] >= router.monitor.threshold
+
+
+def test_stale_reply_from_late_recovering_original_is_dropped():
+    """Satellite (ISSUE 8): a hedged critical-path task whose original
+    worker recovers LATE (the injector's duplicate-reply fault) has the
+    duplicate completion dropped by rid — counted in stats["stale_replies"],
+    never double-completed."""
+    slots = _slots(2)
+    pool = EnginePool.from_slots(slots, relaunch_budget=0)
+    # worker 0's first generate: do the work, hold the reply 0.6s, return it
+    # late -- by then the hedge has won the race
+    plan = FaultPlan().add(0, 1, "dup", 0.6)
+    FaultInjector(plan).install(pool)
+    router = Router(pool, deadline_factor=3.0, min_deadline=0.05,
+                    wd_poll=0.005, max_batch=8)
+    for e, rate in ((0, 1e-3), (1, 2e-3)):   # CP pins to worker 0
+        router.costs.update((8, 4), e, rate)
+    rng = np.random.default_rng(24)
+    rids = _submit(router, rng, per_class=2, classes=(8,))
+    done = router.serve(max_ticks=200)
+    assert set(done) == set(rids)
+    assert router.stats["completions"] == len(rids)      # no double-complete
+    assert router.stats["hedges"] >= 1
+    assert router.stats["hedges"] <= router.stats["overdue_cp"]
+    assert router.stats["stale_replies"] >= 1            # the late duplicate
+    # both attempts really ran: the original did the work before holding
+    assert len(slots[0].engine.calls) >= 1
+    assert len(slots[1].engine.calls) >= 1
