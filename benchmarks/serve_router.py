@@ -19,6 +19,15 @@ flat in the resident count (asserted in-bench: 8x residents <= 1.25x the 1x
 latency).  A classic-HEFT comparison row (``heft_router``) is recorded for
 context; HEFT is a different algorithm with no bit-identity contract, so it
 is NOT identity-checked (flagged in the row metadata).
+
+The SLO rows (ISSUE 9) measure what the weighted admission tiers buy a
+high-tier tenant under an adversarial low-tier flood: 8 flooding tenants
+submit first, one gold tenant (weight 8, with an SLO) submits last, all in
+the SAME workload class so the queue's drain order alone decides dispatch
+order.  ``jax_csr_router_slo`` records the gold tenant's P99
+submit-to-dispatch sojourn tiered vs untiered, asserted better (+0.2ms
+noise floor) tiered — and identity-checked first: uniform tier weights must
+reproduce the untiered insertion-order round-robin drain pop for pop.
 """
 from __future__ import annotations
 
@@ -28,7 +37,8 @@ import numpy as np
 
 from repro.core import ceft, heft
 from repro.core.ceft_jax import ceft_jax
-from repro.serve import EnginePool, EngineSlot, Request, Router, WorkerSpec
+from repro.serve import (AdmissionQueue, EnginePool, EngineSlot, Request,
+                         Router, TenantTier, WorkerSpec)
 
 from .common import CSV, scale, timed
 
@@ -132,6 +142,7 @@ def run(seed: int = 7, json_rows: list | None = None):
     _run_steady(csv, seed, per_class, json_rows)
     _run_scaleout(csv, seed, per_class, json_rows)
     _run_hedge(csv, seed, per_class, json_rows)
+    _run_slo(csv, seed, per_class, json_rows)
 
 
 def _refill(router: Router, ds, rng) -> None:
@@ -298,6 +309,103 @@ def _run_hedge(csv: CSV, seed: int, per_class: int,
     assert ms[True] <= 1.25 * ms[False] + 2e-4, (
         f"armed steady tick regressed: {ms[False] * 1e3:.3f}ms disarmed vs "
         f"{ms[True] * 1e3:.3f}ms armed")
+
+
+def _slo_sojourn(seed: int, flood: int, ngold: int,
+                 tiers: dict | None) -> tuple[float, int, int]:
+    """Gold-tenant P99 submit-to-dispatch sojourn under a low-tier flood.
+
+    One workload class only, so the admission queue's drain order IS the
+    dispatch order; ``tick_budget`` bounds each tick, so a request's sojourn
+    is (ticks it waits) x (real per-tick planning cost) — wall-clock, with
+    the SLO plane's own per-tick cost (deadline stamping + propagation on
+    the gold requests) inside the measured region."""
+    rng = np.random.default_rng(seed)
+    queue = None if tiers is None else AdmissionQueue(tiers=tiers)
+    router = _make_router(2, 1, rng, queue=queue)
+    router.tick_budget = 4
+    t_sub: dict[int, float] = {}
+    gold_rids: list[int] = []
+    reqs: list[Request] = []
+    for _ in range(flood):                 # the flood submits FIRST
+        for t in range(8):
+            prompt = rng.integers(2, 100, 8).astype(np.int32)
+            reqs.append(Request(f"low{t}", prompt, 8))
+    for _ in range(ngold):                 # gold arrives behind all of it
+        prompt = rng.integers(2, 100, 8).astype(np.int32)
+        r = Request("gold", prompt, 8)
+        gold_rids.append(r.rid)
+        reqs.append(r)
+    for r in reqs:
+        assert router.submit(r), "slo bench overflowed the admission queue"
+        t_sub[r.rid] = time.perf_counter()
+    t_disp: dict[int, float] = {}
+    ticks = 0
+    while len(router.queue) or router.resident:
+        ds = router.tick()
+        ticks += 1
+        now = time.perf_counter()
+        for d in ds:
+            for r in d.requests:
+                t_disp[r.rid] = now
+        assert ticks <= 4 * len(reqs), "slo bench tick loop failed to drain"
+    assert len(t_disp) == len(reqs)
+    gold = np.array([t_disp[rid] - t_sub[rid] for rid in gold_rids])
+    return float(np.quantile(gold, 0.99)), len(reqs), ticks
+
+
+def _run_slo(csv: CSV, seed: int, per_class: int,
+             json_rows: list | None) -> None:
+    """ISSUE 9: what weighted tiers buy a high-SLO tenant under flood.
+
+    Identity first: uniform tier weights must reproduce the untiered
+    insertion-order round-robin drain pop for pop (across chunked drains,
+    so WRR credit persistence is in the check).  Then the adversarial run:
+    8 low tenants flood, gold (weight 8, SLO-carrying) submits last; gold's
+    P99 sojourn must be better tiered than untiered."""
+    rng = np.random.default_rng(seed)
+    uni = AdmissionQueue(tiers={f"t{i}": TenantTier(f"t{i}", 1.0)
+                                for i in range(4)})
+    plain = AdmissionQueue()
+    for t in rng.integers(0, 4, 64):
+        prompt = np.arange(4, dtype=np.int32)
+        uni.submit(Request(f"t{t}", prompt, 4))
+        plain.submit(Request(f"t{t}", prompt, 4))
+    got_u: list[str] = []
+    got_p: list[str] = []
+    while len(uni) or len(plain):
+        got_u += [r.tenant for r in uni.drain(3)]
+        got_p += [r.tenant for r in plain.drain(3)]
+    assert got_u == got_p, \
+        "uniform tier weights diverged from the untiered round-robin drain"
+
+    flood = max(4, min(16, per_class))
+    ngold = 8
+    tiers = {f"low{t}": TenantTier(f"low{t}", 1.0) for t in range(8)}
+    tiers["gold"] = TenantTier("gold", 8.0, slo=60.0)
+    # warm the single-class DAG shape's compiled sweep OUTSIDE the timed
+    # runs: the first G=1 plan pays jit compile, and whichever config ran
+    # first would otherwise absorb ~all of it into its sojourn numbers
+    _slo_sojourn(seed, 1, 1, None)
+    p99 = {}
+    for label, tr in (("slo_untiered", None), ("slo_tiered", tiers)):
+        t, n, ticks = _slo_sojourn(seed, flood, ngold, tr)
+        p99[label] = t
+        csv.row("serve_router", label, n, 2, 0, "jax_csr_router_slo",
+                f"{t * 1e3:.3f}", f"{ticks}", ngold)
+        if json_rows is not None:
+            json_rows.append({
+                "bench": "serve_router", "graph": label, "impl":
+                "jax_csr_router_slo", "n": int(n), "P": 2, "e": 0,
+                "ms": float(t * 1e3), "speedup": None,
+                "speedup_vs_padded": None,
+            })
+    # the tiers' whole point: the weighted drain pulls gold forward through
+    # the flood (w=8 vs 8x w=1 -> every other slot instead of every ninth),
+    # so gold's tail sojourn must improve (0.2ms floor absorbs timer noise)
+    assert p99["slo_tiered"] <= p99["slo_untiered"] + 2e-4, (
+        f"tiered gold P99 regressed: {p99['slo_tiered'] * 1e3:.3f}ms tiered "
+        f"vs {p99['slo_untiered'] * 1e3:.3f}ms untiered")
 
 
 def _graph(n, src, dst, data):

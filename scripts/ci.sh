@@ -164,6 +164,45 @@ if [ -n "$violations" ]; then
 fi
 echo "ci: fault-injection containment invariant holds"
 
+# Docs completeness (ISSUE 9): docs/architecture.md's module map must name
+# every module under src/repro/serve/ and src/repro/sched/ -- a new module
+# lands with its line in the map or CI fails -- and every relative markdown
+# link in docs/*.md and README.md must resolve to a real file, so the docs
+# cannot silently rot as the tree moves.
+echo "ci: docs check (module map complete, relative links resolve)"
+python - <<'PY'
+import pathlib
+import re
+import sys
+
+root = pathlib.Path(".")
+errors = []
+
+arch = (root / "docs" / "architecture.md").read_text()
+for pkg in ("serve", "sched"):
+    for mod in sorted((root / "src" / "repro" / pkg).glob("*.py")):
+        if mod.name == "__init__.py":
+            continue
+        if f"{pkg}/{mod.name}" not in arch:
+            errors.append(f"docs/architecture.md: module map is missing "
+                          f"{pkg}/{mod.name}")
+
+link = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)]*)?\)")
+for md in [root / "README.md", *sorted((root / "docs").glob("*.md"))]:
+    for target, _frag in link.findall(md.read_text()):
+        if "://" in target:
+            continue
+        if not (md.parent / target).exists():
+            errors.append(f"{md}: broken relative link -> {target}")
+
+if errors:
+    print("ci: FAIL -- docs check:")
+    for e in errors:
+        print(f"  {e}")
+    sys.exit(1)
+print("ci: docs are complete and links resolve")
+PY
+
 echo "ci: tier-1 tests"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 

@@ -22,6 +22,14 @@ exactly once — the local chaos soak):
 
   PYTHONPATH=src python -m repro.launch.serve --router --pool-size 4 \
       --requests 4 --deadline-factor 3 --chaos-seed 7
+
+SLO plane (--tiers assigns tenants to weighted tiers round-robin; a tier
+with an SLO stamps it on every admitted request, and the router propagates
+it backward through each tick's plan — see docs/cli.md for the full flag
+reference and docs/architecture.md for the request lifecycle):
+
+  PYTHONPATH=src python -m repro.launch.serve --router --tenants 3 \
+      --tiers gold:8:2.0,bronze:1 --deadline-factor 3
 """
 import argparse
 import sys
@@ -31,13 +39,32 @@ import numpy as np
 from .. import configs as C
 from ..models.common import profile_names
 from ..serve import (
+    AdmissionQueue,
     Engine,
     EnginePool,
     Request,
     Router,
     ServeConfig,
+    TenantTier,
     WorkerSpec,
 )
+
+
+def parse_tiers(spec: str) -> list[TenantTier]:
+    """``name:weight[:slo]`` comma-separated, e.g. ``gold:8:2.0,bronze:1``."""
+    tiers = []
+    for part in [p.strip() for p in spec.split(",") if p.strip()]:
+        bits = part.split(":")
+        if not 2 <= len(bits) <= 3:
+            raise SystemExit(f"--tiers: bad tier {part!r} "
+                             "(want name:weight[:slo])")
+        try:
+            tiers.append(TenantTier(
+                bits[0], float(bits[1]),
+                float(bits[2]) if len(bits) == 3 else None))
+        except ValueError as e:
+            raise SystemExit(f"--tiers: {e}")
+    return tiers
 
 
 def run_router(args) -> None:
@@ -74,10 +101,25 @@ def run_router(args) -> None:
     deadline_factor = args.deadline_factor if args.deadline_factor > 0 else None
     if chaos is not None and deadline_factor is None:
         deadline_factor = 3.0   # chaos without the watchdog would just hang
-    # generous floor under chaos: smoke engines jit-compile on first
-    # generate, and a compile must not read as a blown deadline
-    min_deadline = 2.0 if chaos is not None else 0.05
-    router = Router(pool, max_batch=args.batch,
+    # --tiers: tenant t takes tier t % len(tiers); the queue drains by tier
+    # weight and stamps each tier's SLO onto its tenants' requests
+    queue = None
+    tier_of: dict[str, TenantTier] = {}
+    if args.tiers:
+        tiers = parse_tiers(args.tiers)
+        for t in range(args.tenants):
+            tier = tiers[t % len(tiers)]
+            tier_of[f"tenant{t}"] = tier
+        queue = AdmissionQueue(tiers={
+            name: TenantTier(name, tier.weight, tier.slo)
+            for name, tier in tier_of.items()})
+    # generous floor under chaos or tier SLOs: smoke engines jit-compile on
+    # first generate (~1.5s), and a compile must not read as a blown deadline
+    # -- with a sub-compile budget floor the watchdog walks every cold worker
+    # to strike-3 lost before its first result can land
+    slo_tiers = any(t.slo is not None for t in tier_of.values())
+    min_deadline = 2.0 if (chaos is not None or slo_tiers) else 0.05
+    router = Router(pool, max_batch=args.batch, queue=queue,
                     deadline_factor=deadline_factor, hedge=args.hedge,
                     min_deadline=min_deadline)
     rng = np.random.default_rng(0)
@@ -111,7 +153,12 @@ def run_router(args) -> None:
     for rid in done:
         counts[tenant_of[rid]] = counts.get(tenant_of[rid], 0) + 1
     for tenant in sorted(counts):
-        print(f"router: {tenant}: {counts[tenant]} completed")
+        tier = tier_of.get(tenant)
+        extra = ("" if tier is None else
+                 f" (tier={tier.name} w={tier.weight:g}"
+                 + (f" slo={tier.slo:g}s" if tier.slo is not None else "")
+                 + ")")
+        print(f"router: {tenant}: {counts[tenant]} completed{extra}")
     s = router.stats
     print(f"router: plans={s['plans']} (degraded={s['degraded_plans']}) "
           f"cache_hits={s['cache_hits']} partial_sweeps={s['partial_sweeps']} "
@@ -128,6 +175,8 @@ def run_router(args) -> None:
               f"overdue={s['overdue']} overdue_cp={s['overdue_cp']} "
               f"hedges={s['hedges']} stale_replies={s['stale_replies']} "
               f"requeued={s['requeued']} wd_lost={s['watchdog_lost']}")
+        print(f"router: slo shed={s['slo_shed']} slo_hedges={s['slo_hedges']} "
+              f"clamped_budgets={s['clamped_budgets']}")
     if chaos is not None:
         f = chaos.stats
         fired = {k: v for k, v in f.items() if k != "calls" and v}
@@ -199,6 +248,12 @@ def main():
                          "this seed and assert exactly-once completion")
     ap.add_argument("--chaos-rate", type=float, default=0.25,
                     help="per-call fault probability for the seeded plan")
+    ap.add_argument("--tiers", default="",
+                    help="router mode: comma-separated tenant tiers "
+                         "name:weight[:slo-seconds], assigned to tenants "
+                         "round-robin; weights drive the admission queue's "
+                         "weighted drain, SLOs arm backward deadline "
+                         "propagation (e.g. gold:8:2.0,bronze:1)")
     args = ap.parse_args()
 
     if args.router:

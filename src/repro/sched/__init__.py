@@ -1,10 +1,12 @@
 """repro.sched — the paper's algorithm as the runtime's scheduling brain."""
+from .deadlines import DeadlineSchedule, plan_classes, propagate_deadlines
 from .layer_dag import DEFAULT_FLEET, DeviceClass, build_layer_dag, fleet_machine
 from .partitioner import PipelinePlan, Stage, plan_pipeline
 from .plancache import PlanCache, PlanEntry
 from .straggler import (LOST_SLOWDOWN, EwmaCostTable, StragglerEvent,
                         StragglerMonitor)
-__all__ = ["DEFAULT_FLEET", "DeviceClass", "EwmaCostTable", "LOST_SLOWDOWN", "PipelinePlan",
-           "PlanCache", "PlanEntry", "Stage", "StragglerEvent",
-           "StragglerMonitor", "build_layer_dag", "fleet_machine",
-           "plan_pipeline"]
+__all__ = ["DEFAULT_FLEET", "DeadlineSchedule", "DeviceClass", "EwmaCostTable",
+           "LOST_SLOWDOWN", "PipelinePlan", "PlanCache", "PlanEntry", "Stage",
+           "StragglerEvent", "StragglerMonitor", "build_layer_dag",
+           "fleet_machine", "plan_classes", "plan_pipeline",
+           "propagate_deadlines"]

@@ -22,8 +22,9 @@ This module is now the single owner of that state, in three layers:
   plans with their per-run carry snapshots, a reverse index from workload
   class to the plans whose DAG contains it, and dirty-frontier re-sweeps.
 
-The invalidation invariant (README "Incremental planning"): a cost delta may
-only SKIP work, never change the resulting schedule.  Invalidation here is
+Invariant: **invalidate-don't-recompute** (README "Incremental planning") —
+a cost delta may only SKIP work, never change the resulting schedule, and no
+delta handler anywhere in the tree recomputes a plan inline.  Invalidation is
 therefore advisory — it marks plans dirty through the reverse index so the
 router stops short-circuiting on them — while :meth:`PlanCache.plan` always
 byte-compares the stored float32 cost plane against the requested one before

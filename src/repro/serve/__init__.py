@@ -7,10 +7,11 @@ from .pool import (
     null_engine_factory,
     smoke_engine_factory,
 )
-from .queue import AdmissionQueue, Request, class_mix, workload_class
+from .queue import AdmissionQueue, Request, TenantTier, class_mix, workload_class
 from .router import Dispatch, Router, router_machine
 from .watchdog import DeadlineWatchdog
 __all__ = ["AdmissionQueue", "DeadlineWatchdog", "Dispatch", "Engine",
            "EnginePool", "EngineSlot", "Request", "Router", "ServeConfig",
-           "WorkerLost", "WorkerSpec", "class_mix", "null_engine_factory",
-           "router_machine", "smoke_engine_factory", "workload_class"]
+           "TenantTier", "WorkerLost", "WorkerSpec", "class_mix",
+           "null_engine_factory", "router_machine", "smoke_engine_factory",
+           "workload_class"]

@@ -1,8 +1,12 @@
 """Deterministic fault injection for the serving plane (chaos harness).
 
-Everything that can *break* a pool worker on purpose lives here — this module
-is the only place allowed to attach to :meth:`EnginePool.add_handle_wrapper`
-(``scripts/ci.sh`` greps that the hook stays private to it).  The injector
+Invariant: **faults enter only through the wrapper seam**.  Everything that
+can *break* a pool worker on purpose lives here — this module is the only
+place allowed to attach to :meth:`EnginePool.add_handle_wrapper`
+(``scripts/ci.sh`` greps that the hook stays private to it), so production
+code paths contain zero fault branches: disarmed, the pool runs the exact
+bytes a chaos run exercises, and a fault can never hide in router/pool
+logic where it would fire outside a chaos soak.  The injector
 wraps every worker handle (both backends: inproc and subprocess) with a proxy
 that consults a :class:`FaultPlan` — a scripted or seed-derived schedule of
 faults keyed by (worker index, per-worker generate-call number) — and fails

@@ -32,6 +32,16 @@ run concurrently by the scoped-profile substrate.  Every tick the router:
 A degraded engine (StragglerMonitor threshold trip) therefore sheds
 critical-path work automatically: its comp column inflates, CEFT maps the
 path elsewhere, and the dispatch follows the path.
+
+The SLO plane (ISSUE 9) rides on the same plan: tenants may carry
+:class:`~repro.serve.queue.TenantTier`\\ s (weighted drain + latency SLOs
+stamped at admission), each cached plan's backward deadline propagation
+(repro.sched.deadlines, memoized on the plan-cache entry) assigns every
+class a latest start/finish and slack, watchdog budgets are armed from the
+propagated latest-finish instead of the flat ``deadline_factor x span``,
+and degraded engines shed their most-slack dispatches first — both at tick
+time (``_slo_shed``) and on the overdue ladder (slack-rich work requeues at
+strike 1, SLO-critical work hedges like critical-path work).
 """
 from __future__ import annotations
 
@@ -46,6 +56,7 @@ import numpy as np
 from ..core.ceft import CeftResult
 from ..core.ceft_jax import request_graph
 from ..core.machine import Machine
+from ..sched.deadlines import DeadlineSchedule, propagate_deadlines
 from ..sched.plancache import PlanCache, machine_fingerprint
 from ..sched.straggler import EwmaCostTable, StragglerMonitor
 from .engine import ServeConfig
@@ -62,6 +73,11 @@ class Dispatch:
     on_critical_path: bool
     node_prefill: int            # this class's vertex ids in the planned DAG
     node_decode: int
+    # SLO plane (ISSUE 9): the tightest absolute deadline among the batch's
+    # requests (None = best-effort) and the class's structural slack from the
+    # backward deadline propagation (inf when no propagation is available)
+    deadline: float | None = None
+    slack: float = float("inf")
 
 
 def router_machine(P: int, *, kv_bw: float = 1e4, latency: float = 1e-3) -> Machine:
@@ -133,7 +149,8 @@ class Router:
                       "partial_sweeps": 0, "resident": 0, "requeued": 0,
                       "overdue": 0, "overdue_cp": 0, "hedges": 0,
                       "stale_replies": 0, "completions": 0,
-                      "watchdog_lost": 0}
+                      "watchdog_lost": 0, "clamped_budgets": 0,
+                      "slo_shed": 0, "slo_hedges": 0}
         self.failures: list[tuple[str, BaseException]] = []
         # deadline watchdog (None = disarmed: serve() is the plain PR 7 loop).
         # deadline_factor arms it: every dispatch carries a deadline derived
@@ -380,6 +397,7 @@ class Router:
                         progressed = True
                 if not progressed:
                     break
+        degraded_mode = bool((self._slow >= self.monitor.threshold).any())
         out: list[Dispatch] = []
         for i, wc in enumerate(classes):
             if takes[wc] == 0:
@@ -408,13 +426,61 @@ class Router:
                     self.stats["split"] += 1
                 chunks.extend(rl[k:k + size] for k in range(0, len(rl), size))
             for chunk in chunks:
-                self.stats["dispatches"] += 1
-                self.stats["coalesced"] += len(chunk) - 1
-                out.append(Dispatch(int(cls), chunk, wc, on_cp, pre, dec))
+                dl: float | None = None
+                for r in chunk:
+                    rd = r.deadline
+                    if rd is not None:
+                        dl = rd if dl is None else min(dl, rd)
+                out.append(Dispatch(int(cls), chunk, wc, on_cp, pre, dec,
+                                    deadline=dl))
+        # the SLO plane only engages when a dispatch carries a deadline or
+        # an engine is degraded: a best-effort steady-state tick must stay
+        # O(classes + budget), so the propagation (memoized per plan entry)
+        # is not even consulted on that path
+        if degraded_mode or any(d.deadline is not None for d in out):
+            D = self._deadline_view()
+            if D is not None:
+                for d in out:
+                    d.slack = float(D.slack[d.node_decode])
+        if degraded_mode:
+            out = self._slo_shed(out)
+        for d in out:
+            self.stats["dispatches"] += 1
+            self.stats["coalesced"] += len(d.requests) - 1
         # emptied classes leave the resident mix (and thus the plan signature)
         for wc in [wc for wc, q in self.resident.items() if not q]:
             del self.resident[wc]
         self.stats["resident"] = sum(len(q) for q in self.resident.values())
+        return out
+
+    def _slo_shed(self, out: list[Dispatch]) -> list[Dispatch]:
+        """Slack-keyed shedding off degraded engines (ISSUE 9): of the
+        dispatches the plan still placed on a monitor-degraded engine, the
+        MOST-slack ones are held back (requeued for the next tick's re-plan)
+        first — they can absorb the extra tick without missing their
+        deadline, while the least-slack work keeps its slot rather than
+        gambling its remaining budget on a requeue.  Bounded: a healthy
+        engine must exist (else deferring is pure livelock) and at least one
+        dispatch always goes out, so every tick makes progress."""
+        slow_eng = {i for i in range(len(self._slow))
+                    if self._slow[i] >= self.monitor.threshold}
+        healthy = [i for i in self.pool.live_indices() if i not in slow_eng]
+        if not healthy or len(out) <= 1:
+            return out
+        candidates = sorted(
+            (d for d in out
+             if d.engine in slow_eng and d.slack > self.planned_span(d)),
+            key=lambda d: -d.slack)
+        shed: list[Dispatch] = []
+        for d in candidates:
+            if len(out) - len(shed) <= 1:
+                break
+            shed.append(d)
+        if shed:
+            ids = {id(d) for d in shed}
+            out = [d for d in out if id(d) not in ids]
+            self._requeue(shed)
+            self.stats["slo_shed"] += sum(len(d.requests) for d in shed)
         return out
 
     # -------------------------------------------------------------- execution
@@ -465,11 +531,51 @@ class Router:
         priced with, so the watchdog enforces exactly what the plan
         promised.  The slowdown factor is capped: a monitor-degraded (or
         LOST-column) engine would otherwise inflate the budget toward
-        infinity and disarm the watchdog exactly when it matters most."""
+        infinity and disarm the watchdog exactly when it matters most.
+        Hitting the cap is counted (``stats["clamped_budgets"]``): a clamped
+        budget under-states a genuinely slower engine's span, so SLO misses
+        caused by the cap must be observable, not silent."""
         rate = float(self.costs.row(d.wclass)[d.engine])
         slow = float(self._slow[d.engine]) if d.engine < len(self._slow) else 1.0
+        if slow > 10.0:
+            self.stats["clamped_budgets"] += 1
         return (rate * min(slow, 10.0)
                 * len(d.requests) * (d.wclass[0] + d.wclass[1]))
+
+    def _deadline_view(self) -> DeadlineSchedule | None:
+        """The cached plan's backward deadline propagation, memoized on the
+        plan-cache entry (``PlanEntry.derived``) so a steady-state tick never
+        re-propagates: re-sweeps build a fresh entry (fresh memo slot) and
+        byte-equal hits return the same entry, so the memo can never serve a
+        schedule inconsistent with the plan it annotates."""
+        entry = self._entry
+        if entry is None:
+            return None
+        D = entry.derived.get("deadlines")
+        if D is None:
+            D = propagate_deadlines(entry.graph, entry.comp32, entry.machine,
+                                    entry.result)
+            entry.derived["deadlines"] = D
+        return D
+
+    def dispatch_budget(self, d: Dispatch) -> float:
+        """The watchdog budget for one dispatch: the flat
+        ``deadline_factor x planned_span`` when the batch is best-effort,
+        else the tighter of that and the SLO's propagated latest-finish —
+        ``latest_finish(decode) + remaining - makespan`` shifts the plan-
+        relative latest finish onto the request's remaining budget (latest
+        times are affine in the horizon, see repro.sched.deadlines).  Floor-
+        clamped by ``min_deadline`` so an already-blown SLO degrades to the
+        fastest ladder, not a zero budget."""
+        wd = self.watchdog
+        flat = wd.budget(self.planned_span(d))
+        if d.deadline is None:
+            return flat
+        rem = d.deadline - time.monotonic()
+        D = self._deadline_view()
+        if D is not None:
+            rem = D.latest_finish_for(d.node_decode, rem)
+        return max(wd.min_deadline, min(flat, rem))
 
     def _complete(self, d: Dispatch, out: dict[int, np.ndarray]) -> None:
         """First-attempt-wins completion: a rid already completed (by the
@@ -486,12 +592,18 @@ class Router:
                     self.stats["completions"] += 1
 
     def _on_overdue(self, entry: InflightEntry, now: float) -> None:
-        """Watchdog callback — the escalation ladder, one rung per strike:
+        """Watchdog callback — the escalation ladder, one rung per strike,
+        keyed on the dispatch's remaining SLO budget where it has one:
 
         1. report the offender to the straggler monitor (its column trips
-           the threshold, so the next plan sheds work off it) and, for a
-           critical-path dispatch with hedging on, speculatively re-send to
-           the degraded plane's best alternate;
+           the threshold, so the next plan sheds work off it); then either
+           HEDGE — critical-path work, or SLO-critical work whose remaining
+           budget cannot survive another strike (rem < budget): duplicate to
+           the degraded plane's best alternate now, first result wins — or
+           SHED — slack-rich work (rem >= 2 budgets): requeue immediately,
+           it can absorb a re-plan round-trip, so it leaves the degraded
+           engine first.  Best-effort / middling-slack work just waits for
+           rung 2 (the historical ladder);
         2. requeue the dispatch — the next tick re-plans it elsewhere
            (first result wins; the stuck original is dropped as stale);
         3. the worker is treated as hung for good: mark_lost degrades its
@@ -510,12 +622,23 @@ class Router:
             self.stats["invalidations"] += self.plancache.invalidate(
                 engine=entry.engine)
             self._plan_sig = None
-            if entry.on_critical_path and self.hedge and not entry.hedged:
+            rem = None if d.deadline is None else d.deadline - now
+            slo_critical = rem is not None and rem < entry.budget
+            if ((entry.on_critical_path or slo_critical)
+                    and self.hedge and not entry.hedged):
                 entry.hedged = True
+                if slo_critical and not entry.on_critical_path:
+                    self.stats["slo_hedges"] += 1
                 self._launch_hedge(entry)
+            elif rem is not None and rem >= 2.0 * entry.budget:
+                entry.shed = True
+                self.stats["slo_shed"] += len(d.requests)
+                with self._serve_lock:
+                    self._wd_requeue.append(d)
         elif entry.strikes == 2:
-            with self._serve_lock:
-                self._wd_requeue.append(d)
+            if not entry.shed:      # a strike-1 shed already requeued it
+                with self._serve_lock:
+                    self._wd_requeue.append(d)
         else:
             self.stats["watchdog_lost"] += 1
             self.watchdog.disarm(entry.seq)
@@ -589,7 +712,8 @@ class Router:
         def run():
             seq = next_seq()
             self.watchdog.arm(seq, clone, planned_span=self.planned_span(clone),
-                              engine=clone.engine, on_critical_path=False)
+                              engine=clone.engine, on_critical_path=False,
+                              budget=self.dispatch_budget(clone))
             try:
                 out = self.run_dispatch(clone)
             except BaseException:
@@ -759,9 +883,12 @@ class Router:
                 def worker(eng: int, name: str, ds: list[Dispatch]):
                     for i, d in enumerate(ds):
                         seq = next_seq()
+                        # armed from the propagated latest-finish when the
+                        # batch carries an SLO, the flat budget otherwise
                         wd.arm(seq, d, planned_span=self.planned_span(d),
                                engine=eng,
-                               on_critical_path=d.on_critical_path)
+                               on_critical_path=d.on_critical_path,
+                               budget=self.dispatch_budget(d))
                         try:
                             out = self.run_dispatch(d)
                         except WorkerLost as e:

@@ -11,16 +11,24 @@ Here the plan becomes an enforcement budget — every dispatch is armed with
 where ``planned_span`` is the dispatch's expected service time under the
 current EWMA cost table x straggler slowdowns (the same numbers the plan was
 priced with), floor-clamped by ``min_deadline`` so micro-second smoke spans
-do not turn timer noise into false alarms.
+do not turn timer noise into false alarms.  A caller that knows better —
+the router arming from a backward-propagated latest-finish (ISSUE 9,
+repro.sched.deadlines) — passes an explicit ``budget=`` to :meth:`arm` and
+that budget replaces the flat multiple for the entry's whole ladder.
 
 The watchdog is deliberately policy-free: it tracks in-flight entries, and a
 monitor thread (or an explicit :meth:`sweep` call — tests drive this with an
 injected clock) reports overdue entries to the ``on_overdue`` callback with a
 strike count.  The *router* owns the response ladder (hedge / report /
 requeue / mark_lost); this module only decides *when* the plan's promise was
-broken.  After each strike the entry's deadline is pushed by one more
-deadline budget, so a stuck dispatch escalates strike by strike instead of
-firing on every poll.
+broken.
+
+Invariant (the reason ci.sh greps keep escalation policy out of this file):
+**one strike per budget** — after each strike the entry's deadline is pushed
+by exactly one more of ITS OWN budget, so a stuck dispatch escalates strike
+by strike instead of firing on every poll, and a three-strike ladder always
+spans three budgets of wall clock regardless of the poll interval.  Nothing
+in this module ever skips a rung or fires twice inside one budget.
 """
 from __future__ import annotations
 
@@ -40,8 +48,10 @@ class InflightEntry:
     planned_span: float          # expected service seconds from the plan
     t0: float                    # arm time (watchdog clock)
     deadline: float              # absolute time the plan's budget expires
+    budget: float = 0.0          # per-strike push (flat or SLO-propagated)
     strikes: int = 0             # overdue sweeps that have fired on this entry
     hedged: bool = False         # a speculative clone was already sent
+    shed: bool = False           # already requeued by a slack-keyed strike
 
 
 class DeadlineWatchdog:
@@ -76,13 +86,20 @@ class DeadlineWatchdog:
                    self.min_deadline)
 
     def arm(self, seq: int, payload, *, planned_span: float, engine: int,
-            on_critical_path: bool) -> InflightEntry:
+            on_critical_path: bool,
+            budget: float | None = None) -> InflightEntry:
+        """Track one attempt.  ``budget=None`` (historical behaviour) uses
+        the flat ``deadline_factor x planned_span``; an explicit budget — the
+        router's SLO-propagated latest-finish — replaces it, floor-clamped by
+        ``min_deadline``, and drives every later strike push too."""
         now = self.clock()
+        b = (self.budget(planned_span) if budget is None
+             else max(float(budget), self.min_deadline))
         entry = InflightEntry(
             seq=int(seq), payload=payload, engine=int(engine),
             on_critical_path=bool(on_critical_path),
             planned_span=float(planned_span), t0=now,
-            deadline=now + self.budget(planned_span))
+            deadline=now + b, budget=b)
         with self._lock:
             self._inflight[entry.seq] = entry
             self.stats["armed"] += 1
@@ -104,7 +121,8 @@ class DeadlineWatchdog:
     def sweep(self, now: float | None = None) -> list[InflightEntry]:
         """Fire one strike on every overdue entry; returns them.
 
-        Each fired entry's deadline is pushed by one more budget before the
+        Each fired entry's deadline is pushed by one more of ITS OWN budget
+        (flat or SLO-propagated, whatever it was armed with) before the
         callback runs, so a still-stuck dispatch escalates one strike per
         budget rather than once per poll, and a handler that disarms the
         entry (mark_lost) simply stops the ladder."""
@@ -115,7 +133,8 @@ class DeadlineWatchdog:
             for entry in self._inflight.values():
                 if entry.deadline <= now:
                     entry.strikes += 1
-                    entry.deadline = now + self.budget(entry.planned_span)
+                    entry.deadline = now + (entry.budget if entry.budget > 0.0
+                                            else self.budget(entry.planned_span))
                     self.stats["overdue"] += 1
                     fired.append(entry)
         if self.on_overdue is not None:

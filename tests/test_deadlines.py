@@ -1,0 +1,157 @@
+"""Backward deadline propagation over planned CEFT schedules (ISSUE 9).
+
+The acceptance property, checked over the graph zoo: the propagation is
+bit-consistent with the CEFT plan — every task's planned schedule under the
+mapped classes dominates its own DP value (``planned_finish >= ceft[t, a(t)]``,
+hence ``makespan >= cpl``), at ``slo = makespan`` slack is non-negative with
+the zero-slack set the mapped critical path, and whenever the partial
+schedule extends to a full one without lengthening (``makespan == cpl``) the
+paper's critical path is EXACTLY a zero-slack chain.  Latest times are
+affine in the horizon (no re-propagation on SLO shifts)."""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from conftest import make_random_dag
+from repro.core import ceft, linear_chain, random_machine, uniform_machine
+from repro.sched import DeadlineSchedule, plan_classes, propagate_deadlines
+
+EPS = 1e-9
+
+
+def _zoo(n, p_edge, P, seed):
+    rng = np.random.default_rng(seed)
+    g = make_random_dag(n, p_edge, rng)
+    m = random_machine(P, rng, bw_range=(0.2, 5.0), L_range=(0.0, 0.5))
+    comp = rng.uniform(0.5, 4.0, (n, P))
+    return g, comp, m
+
+
+def _check_consistency(g, comp, m):
+    """The full property bundle for one (graph, comp, machine) instance."""
+    res = ceft(g, comp, m)
+    D = propagate_deadlines(g, comp, m, res)
+    tol = EPS * max(1.0, abs(D.makespan))
+    cls = plan_classes(res)
+    # the mapping honours the path's own partial assignment
+    for t, p in res.assignment.items():
+        assert cls[t] == p
+    # planned schedule dominates the DP row it was mapped from
+    assert (D.planned_finish + tol >= res.ceft[np.arange(g.n), cls]).all()
+    assert D.makespan >= res.cpl - 1e-6 * max(1.0, res.cpl)
+    # intrinsic slack (slo = makespan): non-negative, zero on a real path
+    assert D.slo == D.makespan and D.feasible
+    assert (D.slack >= -tol).all()
+    assert D.critical().any(), "some task must be critical"
+    assert (D.latest_finish <= D.makespan + tol).all()
+    assert np.allclose(D.planned_finish, D.planned_start + comp[
+        np.arange(g.n), cls], atol=1e-12)
+    # mutual inclusivity, serving-side: when the partial schedule extended
+    # to a full one without lengthening, the DP's critical path IS the
+    # zero-slack chain
+    if abs(D.makespan - res.cpl) <= 1e-6 * max(1.0, res.cpl):
+        crit = D.critical(eps=1e-6)
+        for t, p in res.path:
+            assert crit[t], f"path task {t} has slack {D.slack[t]}"
+            assert cls[t] == p
+    return res, D
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 18), st.sampled_from([0.15, 0.3, 0.6]),
+       st.integers(1, 4), st.integers(0, 10_000))
+def test_propagation_consistent_with_plan_zoo(n, p_edge, P, seed):
+    g, comp, m = _zoo(n, p_edge, P, seed)
+    _check_consistency(g, comp, m)
+
+
+def test_propagation_consistent_fixed_instances():
+    """Deterministic fallback for the zoo property (runs without hypothesis):
+    chains, fan-in, and a handful of random DAGs."""
+    rng = np.random.default_rng(0)
+    for n, p_edge, P, seed in ((2, 0.3, 1, 1), (6, 0.15, 2, 2),
+                               (10, 0.3, 3, 3), (14, 0.6, 4, 4)):
+        g, comp, m = _zoo(n, p_edge, P, seed)
+        _check_consistency(g, comp, m)
+    g = linear_chain(6, data=2.0)
+    comp = rng.uniform(0.5, 4.0, (6, 3))
+    m = random_machine(3, rng, bw_range=(0.2, 5.0), L_range=(0.0, 0.5))
+    res, D = _check_consistency(g, comp, m)
+    # a chain is all critical path: every vertex has zero slack
+    assert D.critical().all()
+    assert D.makespan == pytest.approx(res.cpl, rel=1e-9)
+
+
+def test_affine_shift_matches_repropagation():
+    """latest_*(slo') == latest_*(slo) + (slo' - slo): shifting a cached
+    schedule must equal re-propagating at the new horizon."""
+    g, comp, m = _zoo(12, 0.3, 3, 42)
+    res = ceft(g, comp, m)
+    D = propagate_deadlines(g, comp, m, res)
+    D2 = propagate_deadlines(g, comp, m, res, slo=D.makespan + 3.5)
+    assert np.allclose(D2.latest_start, D.latest_start + 3.5, atol=1e-12)
+    assert np.allclose(D2.latest_finish, D.latest_finish + 3.5, atol=1e-12)
+    assert np.allclose(D2.slack, D.slack + 3.5, atol=1e-12)
+    # planned times do not move with the horizon
+    assert np.array_equal(D2.planned_start, D.planned_start)
+    # latest_finish_for IS that shift, per task
+    for t in range(g.n):
+        assert D.latest_finish_for(t, D.slo + 3.5) == pytest.approx(
+            float(D2.latest_finish[t]), abs=1e-12)
+
+
+def test_infeasible_slo_reports_negative_slack():
+    g, comp, m = _zoo(8, 0.3, 2, 7)
+    res = ceft(g, comp, m)
+    D = propagate_deadlines(g, comp, m, res, slo=0.5 * ceft(g, comp, m).cpl)
+    assert not D.feasible
+    assert (D.slack < 0).any()
+    # and a generous slo is slack everywhere
+    D2 = propagate_deadlines(g, comp, m, res, slo=10.0 * D.makespan)
+    assert D2.feasible and (D2.slack > 0).all()
+
+
+def test_sink_slos_min_combined_and_tighten_upstream():
+    """Per-sink overrides: a tighter sink deadline propagates upstream, and
+    a vertex carrying both the global horizon and an override takes the min."""
+    g = linear_chain(4)
+    comp = np.full((4, 2), 1.0)
+    m = uniform_machine(2)
+    res = ceft(g, comp, m)
+    D = propagate_deadlines(g, comp, m, res)
+    tight = D.makespan - 0.75
+    D2 = propagate_deadlines(g, comp, m, res, sink_slos={3: tight})
+    assert float(D2.latest_finish[3]) == pytest.approx(tight)
+    # the whole upstream chain tightened by the same amount
+    assert np.allclose(D2.latest_finish, D.latest_finish - 0.75, atol=1e-12)
+    # min-combination: an override LOOSER than the horizon is ignored
+    D3 = propagate_deadlines(g, comp, m, res,
+                             sink_slos={3: D.makespan + 5.0})
+    assert np.array_equal(D3.latest_finish, D.latest_finish)
+
+
+def test_comp_shape_mismatch_raises():
+    g = linear_chain(3)
+    m = uniform_machine(2)
+    res = ceft(g, np.ones((3, 2)), m)
+    with pytest.raises(ValueError, match="comp has"):
+        propagate_deadlines(g, np.ones((4, 2)), m, res)
+
+
+def test_feasible_accounts_for_comm_between_classes():
+    """A two-class fan where the mapping forces a cross-class hop: the
+    propagation must charge the DP's own comm rule (L + data/bw), not zero."""
+    from repro.core import from_edges
+
+    g = from_edges(3, [(0, 2, 4.0), (1, 2, 4.0)])
+    # comp forces vertex 0 -> class 0, vertex 1 -> class 1, vertex 2 -> class 0
+    comp = np.array([[1.0, 9.0], [9.0, 1.0], [1.0, 9.0]])
+    m = random_machine(2, np.random.default_rng(3), bw_range=(1.0, 1.0),
+                       L_range=(0.25, 0.25))
+    res = ceft(g, comp, m)
+    D = propagate_deadlines(g, comp, m, res)
+    cls = D.classes
+    assert cls[0] != cls[1], "setup: parents must map to different classes"
+    hop = float(m.L[cls[1]] + 4.0 / m.bw[cls[1], cls[2]])
+    # vertex 2 cannot start before the cross-class parent's finish + hop
+    assert float(D.planned_start[2]) >= float(D.planned_finish[1]) + hop - EPS

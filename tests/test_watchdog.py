@@ -97,6 +97,32 @@ def test_sweep_strikes_once_per_budget_with_injected_clock():
     assert wd.disarm(1) is None                # idempotent
 
 
+def test_arm_explicit_budget_replaces_flat_multiple():
+    """ISSUE 9: an explicit budget (the router's SLO-propagated latest-
+    finish) replaces the flat deadline_factor x span for the deadline AND
+    every later strike push, floor-clamped by min_deadline."""
+    t = [0.0]
+    wd = DeadlineWatchdog(deadline_factor=3.0, min_deadline=0.05,
+                          clock=lambda: t[0])
+    # flat would be 3.0 x 100 = 300s; the propagated budget wins
+    e = wd.arm(1, None, planned_span=100.0, engine=0,
+               on_critical_path=False, budget=0.5)
+    assert e.budget == pytest.approx(0.5)
+    assert e.deadline == pytest.approx(0.5)
+    t[0] = 0.6
+    assert [x.seq for x in wd.sweep()] == [1]
+    assert e.deadline == pytest.approx(1.1)    # pushed by ITS OWN budget
+    t[0] = 1.2
+    assert [x.strikes for x in wd.sweep()] == [2]
+    # a blown SLO degrades to the min_deadline floor, never a zero budget
+    e2 = wd.arm(2, None, planned_span=1.0, engine=0,
+                on_critical_path=False, budget=-3.0)
+    assert e2.budget == pytest.approx(0.05)
+    # budget=None keeps the historical flat behaviour byte for byte
+    e3 = wd.arm(3, None, planned_span=1.0, engine=0, on_critical_path=False)
+    assert e3.budget == pytest.approx(3.0)
+
+
 def test_monitor_thread_fires_on_real_clock():
     fired = threading.Event()
     wd = DeadlineWatchdog(deadline_factor=1.0, min_deadline=0.01,
