@@ -7,10 +7,12 @@ benches).  Each prints CSV to stdout; `python -m benchmarks.run` runs all.
 
 --json mirrors the CEFT-throughput CSV rows into a machine-readable perf
 trajectory file (schema: {"schema", "scale", "rows": [{impl, n, P, e, ms,
-speedup, ...}]}) so future perf PRs have a baseline to diff against; CI
-refreshes it on every pass (scripts/ci.sh).  The serve_router suite also
+speedup, planner, ...}]}) so future perf PRs have a baseline to diff against;
+CI refreshes it on every pass (scripts/ci.sh).  The serve_router suite also
 mirrors its gated per-tick rows (jax_csr_router, jax_csr_router_steady) and
-the identity-unchecked heft_router context row.
+the registry-checked heft_router row; the tournament suite mirrors its CSR
+planning rows, the moldable-router row, and the misidentification rate.
+Every row carries the planner that produced it (default ceft_cpop).
 """
 import argparse
 import json
@@ -20,7 +22,7 @@ import time
 
 def main() -> None:
     from . import (ceft_throughput, kernel_bench, partitioner_bench,
-                   realworld, serve_router, sweeps, table3)
+                   realworld, serve_router, sweeps, table3, tournament)
     from .common import scale
     suites = {
         "table3": table3.run,                      # Table 3 + Figs 5-6
@@ -29,12 +31,14 @@ def main() -> None:
         "realworld": realworld.run,                # Figs 15-18
         "ceft_throughput": ceft_throughput.run,    # §5 complexity / §Perf
         "serve_router": serve_router.run,          # router tick throughput
+        "tournament": tournament.run,              # planner registry race (§7.3)
         "kernel": kernel_bench.run,                # kernel layer
         "partitioner": partitioner_bench.run,      # beyond-paper
     }
     # suites whose run() mirrors rows into the --json trajectory file
     json_suites = {"ceft_throughput": ceft_throughput.run,
-                   "serve_router": serve_router.run}
+                   "serve_router": serve_router.run,
+                   "tournament": tournament.run}
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", choices=list(suites))
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -58,6 +62,11 @@ def main() -> None:
     elif args.json:
         import jax  # record the producing version: the CI gate pins the range
         from repro.substrate import process_topology
+
+        # ISSUE 10: every perf row names the planner that produced it, so a
+        # future planner-default change cannot silently redefine a baseline
+        for r in json_rows:
+            r.setdefault("planner", "ceft_cpop")
 
         # where the rows were produced (ISSUE 7): perf numbers are only
         # comparable on like hardware, so the host/worker topology rides in

@@ -16,9 +16,10 @@ The steady row (ISSUE 6) measures the incremental-admission guarantee: a
 budgeted tick whose resident mix matches the cached plan serves it straight
 from the plan cache — no cost-plane build, no sweep — so its latency must be
 flat in the resident count (asserted in-bench: 8x residents <= 1.25x the 1x
-latency).  A classic-HEFT comparison row (``heft_router``) is recorded for
-context; HEFT is a different algorithm with no bit-identity contract, so it
-is NOT identity-checked (flagged in the row metadata).
+latency).  A classic-HEFT comparison row (``heft_router``) goes through the
+planner registry (ISSUE 10) and is checked: the registry Plan must match a
+direct ``heft()`` call instance for instance and validate as a feasible
+schedule; its planner name rides in the row metadata.
 
 The SLO rows (ISSUE 9) measure what the weighted admission tiers buy a
 high-tier tenant under an adversarial low-tier flood: 8 flooding tenants
@@ -35,7 +36,7 @@ import time
 
 import numpy as np
 
-from repro.core import ceft, heft
+from repro.core import ceft, heft, planners, validate_schedule
 from repro.core.ceft_jax import ceft_jax
 from repro.serve import (AdmissionQueue, EnginePool, EngineSlot, Request,
                          Router, TenantTier, WorkerSpec)
@@ -125,11 +126,19 @@ def run(seed: int = 7, json_rows: list | None = None):
                                      router.machine), reps=3)
         csv.row("serve_router", f"pool{P}", n, P, len(src), "vectorized",
                 f"{t_np * 1e3:.3f}", f"{1.0 / t_np:.1f}", dispatches)
-        # classic HEFT on the same DAG for context: a different algorithm
-        # (insertion-based list scheduling), so deliberately NOT identity-
-        # checked against the CEFT plan (ISSUE 6 satellite)
-        _, t_heft = timed(lambda: heft(_graph(n, src, dst, data), comp,
-                                       router.machine), reps=3)
+        # classic HEFT on the same DAG, now through the planner registry
+        # (ISSUE 10): checked, not a context curiosity — the registry Plan
+        # must reproduce a direct heft() call instance for instance and
+        # validate as a feasible schedule before its timing lands
+        gg = _graph(n, src, dst, data)
+        p_heft = planners.plan("heft", gg, comp, router.machine)
+        direct = heft(gg, comp, router.machine)
+        assert np.array_equal(p_heft.proc, direct.proc) and np.array_equal(
+            p_heft.finish, direct.finish), \
+            "registry heft plan diverged from a direct heft() call"
+        validate_schedule(p_heft, gg, comp, router.machine)
+        _, t_heft = timed(
+            lambda: planners.plan("heft", gg, comp, router.machine), reps=3)
         csv.row("serve_router", f"pool{P}", n, P, len(src), "heft_router",
                 f"{t_heft * 1e3:.3f}", f"{1.0 / t_heft:.1f}", dispatches)
         if json_rows is not None:
@@ -137,7 +146,7 @@ def run(seed: int = 7, json_rows: list | None = None):
                 "bench": "serve_router", "graph": f"pool{P}", "impl":
                 "heft_router", "n": int(n), "P": int(P), "e": int(len(src)),
                 "ms": float(t_heft * 1e3), "speedup": None,
-                "speedup_vs_padded": None, "identity_checked": False,
+                "speedup_vs_padded": None, "planner": "heft",
             })
     _run_steady(csv, seed, per_class, json_rows)
     _run_scaleout(csv, seed, per_class, json_rows)

@@ -45,6 +45,58 @@ def fig_table(rows, figure: str, metric: str, workloads=None):
     return "\n".join(out)
 
 
+def tournament(rows):
+    """Scheduler-tournament pivot: one row per zoo graph, one cpl column per
+    planner (ISSUE 10), followed by the misidentification headline and the
+    timed (jax_csr*) rows."""
+    data = collections.defaultdict(dict)
+    planners: list[str] = []
+    timed_rows = []
+    rate = None
+    for r in rows:
+        if r[0] != "tournament" or len(r) < 9:
+            continue
+        _, graph, n, P, e, planner, cpl, makespan, mis = r[:9]
+        if graph == "misid_rate":
+            rate = (cpl, mis, n)
+        elif planner.startswith("jax_csr"):
+            timed_rows.append((graph, planner, cpl, makespan))
+        else:
+            key = (graph, n, P)
+            data[key][planner] = cpl
+            if planner not in planners:
+                planners.append(planner)
+    if not data and rate is None:
+        return "(no rows for tournament)"
+    out = ["**Scheduler tournament — critical-path length per planner**", "",
+           "| graph | n | P | " + " | ".join(planners) + " |",
+           "|---" * (len(planners) + 3) + "|"]
+    for (graph, n, P), per in data.items():
+        cells = [per.get(p, "-") for p in planners]
+        out.append(f"| {graph} | {n} | {P} | " + " | ".join(cells) + " |")
+    if rate is not None:
+        out += ["", f"Averaging-based path misidentified in {rate[1]}/{rate[2]}"
+                    f" experiments (rate {rate[0]}; paper §7.3: 83.99%)."]
+    for graph, planner, ms, extra in timed_rows:
+        out.append(f"- `{planner}` on {graph}: {ms} ms"
+                   + (f" ({extra})" if extra != "-" else ""))
+    return "\n".join(out)
+
+
+def other_families(rows, known: set):
+    """One line per CSV family the named renderers do not cover — unknown
+    families are surfaced with row counts, never silently dropped."""
+    # r[0] == "bench" is a CSV header line, not a family
+    counts = collections.Counter(
+        r[0] for r in rows if r[0] not in known and r[0] != "bench")
+    if not counts:
+        return None
+    out = ["**Other bench families (raw CSV, no dedicated renderer)**", ""]
+    for fam, k in sorted(counts.items()):
+        out.append(f"- {fam}: {k} row(s)")
+    return "\n".join(out)
+
+
 def table3(rows):
     out = ["**Table 3 — CEFT(-CPOP) vs CPOP, longer/equal/shorter %**", "",
            "| workload | quantity | longer | equal | shorter |",
@@ -62,7 +114,7 @@ def main():
     args = ap.parse_args()
     rows = load(args.csv)
     sections = [table3(rows)]
-    for figure, metric, wl in [
+    figures = [
         ("fig10_speedup_vs_P", "speedup", None),
         ("fig11_12_vs_beta", "slr", ("medium", "high")),
         ("fig11_12_vs_beta", "speedup", ("medium", "high")),
@@ -70,10 +122,17 @@ def main():
         ("fig13_vs_ccr", "slr", None),
         ("fig13_vs_ccr", "slack", None),
         ("fig14_vs_tasks", "slr", None),
-    ]:
+    ]
+    for figure, metric, wl in figures:
         if args.fig and not figure.startswith(args.fig):
             continue
         sections.append(fig_table(rows, figure, metric, wl))
+    if not args.fig or "tournament".startswith(args.fig):
+        sections.append(tournament(rows))
+    known = {"table3", "tournament"} | {f for f, _, _ in figures}
+    extra = other_families(rows, known)
+    if extra is not None and not args.fig:
+        sections.append(extra)
     print("\n\n".join(sections))
 
 

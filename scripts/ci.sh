@@ -164,6 +164,22 @@ if [ -n "$violations" ]; then
 fi
 echo "ci: fault-injection containment invariant holds"
 
+# Planner registry (ISSUE 10): serve/ and sched/ select planners by NAME
+# through core/planners.py -- importing the scheduler functions themselves
+# (ceft_cpop/cpop/heft/heft_down/ceft_heft_up/ceft_heft_down/bruteforce or
+# raw list_schedule) would bypass the registry and fork the planner surface.
+# Importing the planners module, CeftResult/Plan types, and the machinery
+# modules (ceft_jax, machine, taskgraph) stays sanctioned.
+echo "ci: forbidden-API grep (scheduler functions imported outside the planner registry)"
+violations=$(grep -rnE "from \.\.core\.(cpop|heft|bruteforce) import|from \.\.core import [^#]*\b(ceft_cpop|cpop|heft|heft_down|ceft_heft_up|ceft_heft_down|bruteforce_cpl|list_schedule)\b" \
+    src/repro/serve/ src/repro/sched/ --include='*.py' || true)
+if [ -n "$violations" ]; then
+    echo "ci: FAIL -- scheduler imported directly in serve/ or sched/ (use core.planners by name):"
+    echo "$violations"
+    exit 1
+fi
+echo "ci: planner-registry invariant holds"
+
 # Docs completeness (ISSUE 9): docs/architecture.md's module map must name
 # every module under src/repro/serve/ and src/repro/sched/ -- a new module
 # lands with its line in the map or CI fails -- and every relative markdown
@@ -214,6 +230,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
     --prompt-len 8 --max-new 2 > /dev/null
 echo "ci: router smoke ok"
 
+# Planner-registry smoke (ISSUE 10): the same front-end end-to-end with a
+# NON-CEFT planner selected by name and the moldable fork-join axis on --
+# the registry seam must serve real requests, not just pass unit tests.
+echo "ci: non-CEFT planner smoke (--planner heft --max-split 2)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
+    --router --tenants 2 --pool serve,baseline --requests 2 \
+    --prompt-len 8 --max-new 2 --planner heft --max-split 2 \
+    | grep "planner=heft" > /dev/null
+echo "ci: non-CEFT planner smoke ok"
+
 # Chaos smoke (ISSUE 8): the same front-end under the seeded fault injector
 # (kills + hangs + delayed/duplicated replies scheduled by the seed) with
 # the deadline watchdog armed.  The launcher exits nonzero unless every
@@ -246,8 +272,11 @@ trap 'rm -f "$baseline"' EXIT
 if ! git show HEAD:BENCH_ceft.json > "$baseline" 2>/dev/null; then
     cp BENCH_ceft.json "$baseline"   # no git history: gate against last run
 fi
+# the tournament suite rides in the same pass: its in-bench asserts (the
+# loud NONZERO misidentification rate, the oracle dominance check, and the
+# moldable router's mapping-change check) make it a correctness gate too
 REPRO_BENCH_SCALE=0.05 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --only ceft_throughput serve_router \
+    python -m benchmarks.run --only ceft_throughput serve_router tournament \
     --json BENCH_ceft.json > /dev/null
 echo "ci: wrote BENCH_ceft.json"
 echo "ci: perf-regression gate (fresh jax_csr rows vs committed baseline)"

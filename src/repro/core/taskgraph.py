@@ -250,6 +250,41 @@ def linear_chain(n: int, data: float = 1.0) -> TaskGraph:
     return from_edges(n, [(i, i + 1, data) for i in range(n - 1)])
 
 
+def moldable_fork_join_arrays(
+    volumes: np.ndarray, split: int
+) -> tuple[int, np.ndarray, np.ndarray, np.ndarray]:
+    """Edge arrays for a *moldable* fork-join batch DAG (Wang & Sinnen).
+
+    ``volumes[i]`` is batch ``i``'s divisible work (a request class's prefill
+    token volume); ``split`` is the planner-chosen degree d.  Each batch
+    becomes d parallel chunk tasks (vertices ``i*d .. i*d+d-1``, volume/d
+    each) joining into one sink task (vertex ``n_batches*d + i``), with edge
+    data the chunk volume — the KV handoff cost a join pays per chunk that
+    lands on a different class.  ``split=1`` reproduces the classic
+    prefill->decode chain arrays byte-for-byte, which is what keeps the
+    router's content-keyed graph store hitting for unsplit plans.
+
+    Returns ``(n, src, dst, data)`` ready for :func:`from_edge_arrays` (chunk
+    ids precede join ids, so vertex ids are already topological).
+    """
+    volumes = np.asarray(volumes, np.float64)
+    G = int(volumes.size)
+    d = int(split)
+    if d < 1:
+        raise ValueError(f"split degree must be >= 1, got {d}")
+    src = np.arange(G * d, dtype=np.int32)
+    dst = (G * d + src // d).astype(np.int32)
+    data = np.repeat(volumes / d, d)
+    return G * d + G, src, dst, data
+
+
+def moldable_fork_join(volumes: np.ndarray, split: int) -> TaskGraph:
+    """:func:`moldable_fork_join_arrays` built into a TaskGraph (the graph-zoo
+    / tournament entry point; the router keeps the raw arrays for the
+    content-keyed graph store)."""
+    return from_edge_arrays(*moldable_fork_join_arrays(volumes, split))
+
+
 # --------------------------------------------------------------- level tables
 def _level_order(g: TaskGraph) -> tuple[np.ndarray, np.ndarray]:
     """(order, bounds): vertices stably sorted by level (ascending id within a

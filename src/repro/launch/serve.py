@@ -37,6 +37,7 @@ import sys
 import numpy as np
 
 from .. import configs as C
+from ..core.planners import planner_names
 from ..models.common import profile_names
 from ..serve import (
     AdmissionQueue,
@@ -121,7 +122,8 @@ def run_router(args) -> None:
     min_deadline = 2.0 if (chaos is not None or slo_tiers) else 0.05
     router = Router(pool, max_batch=args.batch, queue=queue,
                     deadline_factor=deadline_factor, hedge=args.hedge,
-                    min_deadline=min_deadline)
+                    min_deadline=min_deadline, planner=args.planner,
+                    max_split=args.max_split)
     rng = np.random.default_rng(0)
     # tenant i leans to its own prompt-length bucket -> a mixed-class DAG
     tenant_of: dict[int, str] = {}
@@ -160,6 +162,9 @@ def run_router(args) -> None:
                  + ")")
         print(f"router: {tenant}: {counts[tenant]} completed{extra}")
     s = router.stats
+    print(f"router: planner={router.planner} max_split={router.max_split} "
+          f"split_degree={s['split_degree']} "
+          f"moldable_plans={s['moldable_plans']}")
     print(f"router: plans={s['plans']} (degraded={s['degraded_plans']}) "
           f"cache_hits={s['cache_hits']} partial_sweeps={s['partial_sweeps']} "
           f"invalidations={s['invalidations']} "
@@ -217,6 +222,16 @@ def main():
                     help="sharding profile, scoped to this engine")
     ap.add_argument("--router", action="store_true",
                     help="CEFT-routed multi-tenant front-end over a pool")
+    ap.add_argument("--planner", default="ceft_cpop",
+                    choices=planner_names(include_exhaustive=False),
+                    help="router mode: planner from the scheduler registry "
+                         "used for every per-tick request-DAG plan")
+    ap.add_argument("--max-split", type=int, default=1,
+                    help="router mode: moldable prefill ceiling; the planner "
+                         "sees each class's prefill as a fork-join of d "
+                         "chunks for d in powers of two up to this, and the "
+                         "router keeps the degree whose realized schedule "
+                         "finishes first (1 = classic prefill->decode chain)")
     ap.add_argument("--tenants", type=int, default=2,
                     help="router mode: number of synthetic tenants")
     ap.add_argument("--requests", type=int, default=4,

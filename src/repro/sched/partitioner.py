@@ -12,11 +12,8 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
 from ..configs.base import ArchConfig, ShapeCell
-from ..core import ceft, ceft_cpop, cpop, heft, validate_schedule
-from ..core.schedule import Schedule
+from ..core import planners, validate_schedule
 from .layer_dag import DEFAULT_FLEET, build_layer_dag
 
 
@@ -45,27 +42,28 @@ class PipelinePlan:
 def plan_pipeline(cfg: ArchConfig, cell: ShapeCell, fleet=None) -> PipelinePlan:
     fleet = fleet or DEFAULT_FLEET
     g, comp, m, labels = build_layer_dag(cfg, cell, fleet)
-    res = ceft(g, comp, m)
-    s_ours = ceft_cpop(g, comp, m, res)
-    s_cpop = cpop(g, comp, m)
-    s_heft = heft(g, comp, m)
-    for s in (s_ours, s_cpop, s_heft):
+    # all three plans come from the registry (sched/ never imports scheduler
+    # functions directly); ceft_cpop's Plan carries the CEFT path + cpl
+    p_ours = planners.plan("ceft_cpop", g, comp, m)
+    p_cpop = planners.plan("cpop", g, comp, m)
+    p_heft = planners.plan("heft", g, comp, m)
+    for s in (p_ours, p_cpop, p_heft):
         validate_schedule(s, g, comp, m)
 
     # collapse the CEFT path assignment into contiguous stages
     names = [c.name for c in fleet]
     stages: list[Stage] = []
-    for task, cls in res.path:
+    for task, cls in p_ours.path:
         if stages and names[cls] == stages[-1].device_class:
             stages[-1].end_layer = task
         else:
             stages.append(Stage(task, task, names[cls]))
     return PipelinePlan(
         stages=stages,
-        cpl=res.cpl,
-        makespan=s_ours.makespan,
-        makespan_cpop=s_cpop.makespan,
-        makespan_heft=s_heft.makespan,
-        assignment=res.assignment,
+        cpl=p_ours.cpl,
+        makespan=p_ours.makespan,
+        makespan_cpop=p_cpop.makespan,
+        makespan_heft=p_heft.makespan,
+        assignment=p_ours.assignment,
         labels=labels,
     )

@@ -18,9 +18,12 @@ This module is now the single owner of that state, in three layers:
   each graph's fused super-step tables on device (runs, padded sources, v_b,
   per-run level spans).  TaskGraph is frozen/immutable and entries pin the
   graph object, so identity keying cannot go stale.
-* **Plan store** (:class:`PlanCache`) — (slot, graph, machine)-keyed swept
+* **Plan store** (:class:`PlanCache`) — (slot, planner, graph, machine)-keyed
   plans with their per-run carry snapshots, a reverse index from workload
   class to the plans whose DAG contains it, and dirty-frontier re-sweeps.
+  The planner name comes from the ``core/planners.py`` registry: CEFT keeps
+  the batched CSR fast path, list-scheduling planners go through a host path
+  that still populates the cache and the reverse index.
 
 Invariant: **invalidate-don't-recompute** (README "Incremental planning") —
 a cost delta may only SKIP work, never change the resulting schedule, and no
@@ -45,8 +48,9 @@ from typing import Callable
 
 import numpy as np
 
-from ..core import ceft_jax
+from ..core import ceft_jax, planners
 from ..core.ceft import CeftResult, _finalize
+from ..core.planners import Plan
 from ..core.machine import Machine
 from ..core.taskgraph import TaskGraph, from_edge_arrays, graph_fingerprint
 
@@ -126,7 +130,7 @@ class PlanEntry:
     graph: TaskGraph
     machine: Machine
     comp32: np.ndarray            # (v, P) float32 plane the result was swept with
-    result: CeftResult
+    result: CeftResult | Plan     # CeftResult (CSR path) or Plan (host path)
     carries: list                 # per-run carry snapshots (device arrays)
     classes: frozenset            # workload classes whose vertices the DAG holds
     dirty: bool = False           # advisory: a relevant delta landed since the sweep
@@ -157,23 +161,32 @@ class PlanCache:
 
     # ------------------------------------------------------------------ keys
     @staticmethod
-    def key(g: TaskGraph, m: Machine, slot=None) -> tuple:
-        return (slot, graph_fingerprint(g), machine_fingerprint(m))
+    def key(g: TaskGraph, m: Machine, slot=None,
+            planner: str = "ceft_cpop") -> tuple:
+        return (slot, planner, graph_fingerprint(g), machine_fingerprint(m))
 
     # -------------------------------------------------------------- planning
     def plan(
         self, g: TaskGraph, comp: np.ndarray, m: Machine, *,
-        slot=None, classes=None,
+        slot=None, classes=None, planner: str = "ceft_cpop",
         relax: Callable = ceft_jax.xla_edge_relax,
         store: bool = True,
-    ) -> tuple[CeftResult, str, PlanEntry]:
-        """Plan ``(g, comp, m)`` through the fused CSR sweep, reusing as much
+    ) -> tuple[CeftResult | Plan, str, PlanEntry]:
+        """Plan ``(g, comp, m)`` with the named planner, reusing as much
         cached work as the actual byte-level deltas allow.
 
         ``slot`` namespaces independent planes over the same graph/machine
         (the router's nominal vs degraded scenarios, the straggler baseline).
         ``classes`` registers the plan under those workload classes in the
         reverse index, so targeted :meth:`invalidate` calls can find it.
+        ``planner`` selects the registered planner (``core/planners.py``):
+        CEFT-consuming planners keep the batched CSR fast path below and
+        return a :class:`CeftResult`; list-scheduling planners take a host
+        path that returns a full :class:`Plan` — both still populate the
+        cache, the reverse index, and the hit/full counters, and both verify
+        a byte-equal cost plane before serving anything cached (a host plan
+        is a deterministic function of the float32 plane, so byte-equality
+        implies result-equality exactly as for the sweep).
         ``store=False`` makes the pass TRANSIENT: a miss still reads (and may
         resume from) the cached entry, but the fresh result is never stored —
         speculative pricing (the router's hedge re-plan) must not evict or
@@ -181,7 +194,8 @@ class PlanCache:
         Returns ``(result, status, entry)``.
         """
         comp32 = np.ascontiguousarray(comp, np.float32)
-        k = self.key(g, m, slot)
+        spec = planners.get_planner(planner)
+        k = self.key(g, m, slot, planner=planner)
         with self._lock:
             entry = self._plans.get(k)
             if entry is not None and entry.comp32.shape == comp32.shape and \
@@ -192,6 +206,23 @@ class PlanCache:
                 self._plans.move_to_end(k)
                 self.counters["hits"] += 1
                 return entry.result, "hit", entry
+
+            if not spec.uses_ceft:
+                # host path: no sweep, no carries — the planner runs on the
+                # float64 view of the float32 plane so a byte-equal plane
+                # always reproduces the identical plan
+                result = planners.plan(
+                    planner, g, comp32.astype(np.float64), m)
+                entry = PlanEntry(
+                    graph=g, machine=m, comp32=comp32.copy(), result=result,
+                    carries=[],
+                    classes=frozenset(classes) if classes is not None
+                    else frozenset(),
+                )
+                self.counters["full_sweeps"] += 1
+                if store:
+                    self._store(k, entry)
+                return result, "full", entry
 
             inputs = ceft_jax.csr_device_inputs(g, comp32, m)
             _runs, _cp, _srcs, _L, _bw, _vb = inputs
@@ -282,7 +313,7 @@ class PlanCache:
             if wclass is not None:
                 keys = list(self._by_class.get(wclass, ()))
             elif machine_fp is not None:
-                keys = [k for k in self._plans if k[2] == machine_fp]
+                keys = [k for k in self._plans if k[3] == machine_fp]
             elif engine is not None:
                 keys = list(self._plans.keys())
             else:

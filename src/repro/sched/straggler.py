@@ -18,7 +18,7 @@ import threading
 
 import numpy as np
 
-from ..core import ceft_cpop
+from ..core import planners
 from ..core.machine import Machine
 from ..core.taskgraph import TaskGraph
 from .plancache import PlanCache
@@ -145,9 +145,13 @@ class StragglerMonitor:
     """
 
     def __init__(self, n_classes: int, alpha: float = 0.2, threshold: float = 1.3,
-                 plancache: PlanCache | None = None):
+                 plancache: PlanCache | None = None,
+                 planner: str = "ceft_cpop"):
         self.alpha = alpha
         self.threshold = threshold
+        # nominal + degraded re-planning is parameterized by registry name —
+        # fail fast on typos, before the first maybe_replan
+        self.planner = planners.get_planner(planner).name
         self.ewma = np.ones(n_classes) * np.nan
         self.baseline = np.ones(n_classes) * np.nan
         self.lost = np.zeros(n_classes, bool)
@@ -163,11 +167,17 @@ class StragglerMonitor:
         self._nominal_sched = None
 
     def _cpop(self, g: TaskGraph, comp: np.ndarray, m: Machine, *, slot: str):
-        """Swept plan + memoized CEFT-CPOP mapping through the plan cache."""
-        res, _status, entry = self.plancache.plan(g, comp, m, slot=slot)
-        sched = entry.derived.get("cpop")
+        """Swept plan + memoized realized mapping through the plan cache.
+
+        For CEFT-consuming planners the cache returns the CSR sweep's
+        CeftResult and the realized schedule is memoized per entry; for
+        host-path planners the cached result already IS the full Plan."""
+        res, _status, entry = self.plancache.plan(
+            g, comp, m, slot=slot, planner=self.planner)
+        sched = entry.derived.get("sched")
         if sched is None:
-            sched = entry.derived["cpop"] = ceft_cpop(g, comp, m, res)
+            sched = entry.derived["sched"] = planners.realize(
+                self.planner, g, comp, m, res)
         return sched
 
     def ensure_classes(self, n: int) -> None:

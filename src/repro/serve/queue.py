@@ -55,6 +55,15 @@ def workload_class(prompt_len: int, max_new: int) -> tuple[int, int]:
     return (_pow2ceil(prompt_len), _pow2ceil(max_new))
 
 
+def moldable_class(wclass: tuple[int, int], split: int) -> tuple[int, int, int]:
+    """A workload-class bucket extended with a moldable split degree: the
+    (prompt-len, max-new, split) triple a fork-join plan registers under in
+    the plan cache's reverse index, *alongside* the base pair (cost deltas
+    arrive keyed by the base class and must still dirty every split's plan).
+    ``split=1`` is the unsplit prefill->decode chain."""
+    return (int(wclass[0]), int(wclass[1]), int(split))
+
+
 def class_mix(resident: dict) -> tuple:
     """Deterministic (wclass, count) signature of a pending mix.
 

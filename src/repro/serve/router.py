@@ -53,15 +53,17 @@ from typing import Sequence
 
 import numpy as np
 
+from ..core import planners
 from ..core.ceft import CeftResult
 from ..core.ceft_jax import request_graph
 from ..core.machine import Machine
+from ..core.taskgraph import moldable_fork_join_arrays
 from ..sched.deadlines import DeadlineSchedule, propagate_deadlines
 from ..sched.plancache import PlanCache, machine_fingerprint
 from ..sched.straggler import EwmaCostTable, StragglerMonitor
 from .engine import ServeConfig
 from .pool import EnginePool, EngineSlot, WorkerLost
-from .queue import AdmissionQueue, Request, class_mix, next_seq
+from .queue import AdmissionQueue, Request, class_mix, moldable_class, next_seq
 from .watchdog import DeadlineWatchdog, InflightEntry
 
 
@@ -72,7 +74,8 @@ class Dispatch:
     wclass: tuple[int, int]
     on_critical_path: bool
     node_prefill: int            # this class's vertex ids in the planned DAG
-    node_decode: int
+    node_decode: int             # (node_prefill = first chunk when split > 1)
+    split: int = 1               # planner-chosen moldable prefill split degree
     # SLO plane (ISSUE 9): the tightest absolute deadline among the batch's
     # requests (None = best-effort) and the class's structural slack from the
     # backward deadline propagation (inf when no propagation is available)
@@ -110,7 +113,8 @@ class Router:
                  tick_budget: int | None = None,
                  deadline_factor: float | None = None, hedge: bool = True,
                  min_deadline: float = 0.05, wd_poll: float = 0.01,
-                 watchdog: DeadlineWatchdog | None = None):
+                 watchdog: DeadlineWatchdog | None = None,
+                 planner: str = "ceft_cpop", max_split: int = 1):
         if not isinstance(pool, EnginePool):
             if not pool:
                 raise ValueError("router needs at least one engine slot")
@@ -140,6 +144,15 @@ class Router:
         self.resident: dict[tuple[int, int], deque[Request]] = {}
         self.max_batch = int(max_batch)
         self.latency_slack = float(latency_slack)
+        # planner by registry name (fail fast on typos) + moldable split axis:
+        # candidate degrees are the powers of two up to max_split, each priced
+        # as its own fork-join plan; the tick keeps the degree whose realized
+        # plan finishes first (ties -> smallest degree, so max_split=1 is
+        # byte-identical to the historical unsplit router)
+        self.planner = planners.get_planner(planner).name
+        self.max_split = max(1, int(max_split))
+        self._degrees = [d for d in (1, 2, 4, 8, 16, 32)
+                         if d <= self.max_split]
         self._slow = np.ones(P)
         self._P = P
         self._m_snapshot = self.machine
@@ -150,7 +163,8 @@ class Router:
                       "overdue": 0, "overdue_cp": 0, "hedges": 0,
                       "stale_replies": 0, "completions": 0,
                       "watchdog_lost": 0, "clamped_budgets": 0,
-                      "slo_shed": 0, "slo_hedges": 0}
+                      "slo_shed": 0, "slo_hedges": 0, "split_degree": 1,
+                      "moldable_plans": 0}
         self.failures: list[tuple[str, BaseException]] = []
         # deadline watchdog (None = disarmed: serve() is the plain PR 7 loop).
         # deadline_factor arms it: every dispatch carries a deadline derived
@@ -177,6 +191,7 @@ class Router:
         self._plan_comp: np.ndarray | None = None
         self._chosen: dict | None = None       # class index -> (engine, on_path)
         self._entry = None                     # the cached plan's PlanEntry
+        self._plan_split = 1                   # the cached plan's split degree
 
     @property
     def machine(self) -> Machine:
@@ -265,14 +280,18 @@ class Router:
             self._plan_sig = None
 
     # --------------------------------------------------------------- planning
-    def build_dag(self, groups: list[tuple[tuple[int, int], list[Request]]]):
-        """The pending batch as a task DAG: per class one prefill (vertex i)
-        -> decode (vertex G+i) chain, edge data = the class's prompt-token
-        volume (the KV handoff volume if the decode lands elsewhere), comp
-        from the EWMA per-token rates x token volumes.  The returned plane is
-        *nominal* (unscaled): ``_plan`` applies the monitor's slowdown
-        factors, so the nominal plane stays byte-stable across slowdown
-        changes and the plan cache's nominal slot keeps hitting.
+    def build_dag(self, groups: list[tuple[tuple[int, int], list[Request]]],
+                  split: int = 1):
+        """The pending batch as a task DAG: per class a moldable fork-join —
+        ``split`` parallel prefill chunks (vertices ``i*split ..``) joining
+        into one decode (vertex ``G*split + i``), edge data = the chunk's
+        prompt-token volume (the KV handoff volume if the decode lands on a
+        different engine), comp from the EWMA per-token rates x token
+        volumes.  ``split=1`` is the historical prefill (vertex i) -> decode
+        (vertex G+i) chain, byte-for-byte.  The returned plane is *nominal*
+        (unscaled): ``_plan`` applies the monitor's slowdown factors, so the
+        nominal plane stays byte-stable across slowdown changes and the plan
+        cache's nominal slot keeps hitting.
 
         Token volumes are *bucket-sized* (wclass bound x request count), not
         exact sums: the class is the task, and bucketing keeps the DAG
@@ -280,63 +299,99 @@ class Router:
         the content-keyed graph store actually hits on real traffic
         (exact per-tick prompt sums would miss it every tick)."""
         G = len(groups)
-        src = np.arange(G, dtype=np.int32)
-        dst = src + G
+        d = max(1, int(split))
         rates = self.costs.comp_matrix([wc for wc, _ in groups])
-        data = np.zeros(G, np.float64)
-        comp = np.zeros((2 * G, self.machine.P), np.float64)
+        volumes = np.array([float(wc[0] * len(reqs)) for wc, reqs in groups],
+                           np.float64)
+        n, src, dst, data = moldable_fork_join_arrays(volumes, d)
+        comp = np.zeros((n, self.machine.P), np.float64)
+        comp[:G * d] = np.repeat(rates, d, axis=0) * data[:G * d, None]
         for i, (wc, reqs) in enumerate(groups):
-            data[i] = float(wc[0] * len(reqs))
-            comp[i] = rates[i] * data[i]
-            comp[G + i] = rates[i] * float(wc[1] * len(reqs))
-        return 2 * G, src, dst, data, comp
+            comp[G * d + i] = rates[i] * float(wc[1] * len(reqs))
+        return n, src, dst, data, comp
 
-    def _plan(self, classes, n, src, dst, data, comp_nominal):
+    def _plan(self, classes, n, src, dst, data, comp_nominal, *,
+              split: int = 1):
         """One plan-cache pass over the tick's DAG; scenario-split (degraded
         + nominal planes, each through its own cache slot over the same
         graph) while any engine trips the monitor, so the shed critical-path
-        work is observable against the nominal plan."""
+        work is observable against the nominal plan.  Split-degree plans get
+        their own slots and additionally register under their moldable
+        classes; the base classes stay on every plan so a cost delta keyed by
+        the base class dirties all of a class's split variants.
+
+        Returns ``(res, comp, nom, entry)`` — the caller owns publishing the
+        winning candidate to ``last_plan``/``last_nominal``/``_entry``."""
+        if split > 1:
+            classes = list(classes) + [moldable_class(wc, split)
+                                       for wc in classes]
+            slot_nom, slot_deg = ("router", split), ("router-degraded", split)
+        else:
+            slot_nom, slot_deg = "router", "router-degraded"
         g = request_graph(n, src, dst, data)
         comp = comp_nominal * self._slow[None, :]
         degraded_mode = bool((self._slow >= self.monitor.threshold).any())
         if degraded_mode:
             res, status, entry = self.plancache.plan(
-                g, comp, self.machine, slot="router-degraded", classes=classes)
+                g, comp, self.machine, slot=slot_deg, classes=classes,
+                planner=self.planner)
             nom, _, _ = self.plancache.plan(
-                g, comp_nominal, self.machine, slot="router", classes=classes)
+                g, comp_nominal, self.machine, slot=slot_nom, classes=classes,
+                planner=self.planner)
             self.stats["degraded_plans"] += 1
             self.stats["shed"] += sum(
                 1 for t, p in res.path if nom.assignment.get(t, p) != p)
         else:
             res, status, entry = self.plancache.plan(
-                g, comp, self.machine, slot="router", classes=classes)
+                g, comp, self.machine, slot=slot_nom, classes=classes,
+                planner=self.planner)
             nom = None
         self.stats["plans"] += 1
         if status == "hit":
             self.stats["cache_hits"] += 1
         elif status == "partial":
             self.stats["partial_sweeps"] += 1
-        self.last_plan, self.last_nominal = res, nom
-        self._entry = entry
-        return res, comp
+        return res, comp, nom, entry
 
-    def _choose(self, G: int, res: CeftResult, comp: np.ndarray) -> dict:
+    def _realized_makespan(self, res, entry) -> float:
+        """The candidate plan's realized finish time — the planner's full
+        schedule (instances, contention included) over the entry's own cost
+        plane, memoized per plan entry so steady traffic never re-schedules.
+        This is the moldable degree-selection metric: the class-view DP alone
+        always rewards more splitting (chunks never contend in the class
+        view), the realized schedule prices the contention."""
+        sched = entry.derived.get("sched")
+        if sched is None:
+            sched = entry.derived["sched"] = planners.realize(
+                self.planner, entry.graph,
+                entry.comp32.astype(np.float64), entry.machine, res)
+        return float(sched.makespan)
+
+    def _choose(self, G: int, res: CeftResult, comp: np.ndarray,
+                split: int = 1) -> dict:
         """The ceft_cpop split, serving-side: critical-path classes are
         pinned to the path's own engine; everything else takes its earliest-
         finish class *given the load already placed this tick* (pure argmin
-        over res.ceft would pile every tied class onto engine 0)."""
+        over res.ceft would pile every tied class onto engine 0).  With a
+        moldable split, a class is on-path when ANY of its chunks (or its
+        decode) is, and its placed load sums over all its chunk vertices."""
+        d = max(1, int(split))
         assign = res.assignment                    # critical path's own mapping
         load = np.zeros(self.machine.P)
         chosen: dict[int, tuple[int, bool]] = {}
-        on_path = [i for i in range(G) if i in assign or G + i in assign]
+        on_path = [i for i in range(G)
+                   if G * d + i in assign
+                   or any(i * d + j in assign for j in range(d))]
         for i in on_path + [i for i in range(G) if i not in on_path]:
-            pre, dec = i, G + i
+            pres = range(i * d, i * d + d)
+            dec = G * d + i
             if i in on_path:                       # shed to the path's class
-                cls = int(assign.get(dec, assign.get(pre, 0)))
+                cls = int(assign.get(
+                    dec, next((assign[p] for p in pres if p in assign), 0)))
             else:                                  # earliest finish incl. load
                 cls = int(np.argmin(res.ceft[dec] + load))
             chosen[i] = (cls, i in on_path)
-            load[cls] += comp[pre, cls] + comp[dec, cls]
+            load[cls] += comp[list(pres), cls].sum() + comp[dec, cls]
         return chosen
 
     # --------------------------------------------------------------- the tick
@@ -368,16 +423,38 @@ class Router:
             # cache's reverse index, so staleness cannot be served)
             self.stats["cache_hits"] += 1
             res, comp, chosen = self.last_plan, self._plan_comp, self._chosen
+            split = self._plan_split
         else:
             groups = [(wc, list(self.resident[wc]))
                       for wc in sorted(self.resident)]   # deterministic order
-            n, src, dst, data, comp_nominal = self.build_dag(groups)
-            self.last_dag = (n, src, dst, data, comp_nominal)
+            wcs = [wc for wc, _ in groups]
+            # moldable split-degree selection: price every candidate degree's
+            # fork-join plan (each through its own cache slot) and keep the
+            # one whose REALIZED schedule finishes first — strictly first, so
+            # ties fall to the smallest degree and max_split=1 reproduces the
+            # historical single-candidate tick exactly
+            best = None
+            for dgr in self._degrees:
+                dag = self.build_dag(groups, split=dgr)
+                n, src, dst, data, comp_nominal = dag
+                cand_res, cand_comp, cand_nom, cand_entry = self._plan(
+                    wcs, n, src, dst, data, comp_nominal, split=dgr)
+                if dgr > 1:
+                    self.stats["moldable_plans"] += 1
+                fin = (self._realized_makespan(cand_res, cand_entry)
+                       if len(self._degrees) > 1 else 0.0)
+                if best is None or fin < best[0] - 1e-12 * max(1.0, best[0]):
+                    best = (fin, dgr, dag, cand_res, cand_comp, cand_nom,
+                            cand_entry)
+            _, split, dag, res, comp, nom, entry = best
+            self.last_dag = dag
             self.last_groups = groups
-            res, comp = self._plan([wc for wc, _ in groups],
-                                   n, src, dst, data, comp_nominal)
-            chosen = self._choose(len(groups), res, comp)
+            self.last_plan, self.last_nominal = res, nom
+            self._entry = entry
+            self.stats["split_degree"] = split
+            chosen = self._choose(len(groups), res, comp, split)
             self._plan_sig, self._plan_comp, self._chosen = sig, comp, chosen
+            self._plan_split = split
         classes = sorted(self.resident)
         G = len(classes)
         # round-robin budget split across classes (same fairness idiom as
@@ -404,7 +481,7 @@ class Router:
                 continue
             q = self.resident[wc]
             rs = [q.popleft() for _ in range(takes[wc])]
-            pre, dec = i, G + i
+            pre, dec = i * split, G * split + i
             cls, on_cp = chosen[i]
             # micro-batch formation: coalesce class-mates while the batch's
             # estimated service time stays within latency_slack x the CEFT
@@ -432,7 +509,7 @@ class Router:
                     if rd is not None:
                         dl = rd if dl is None else min(dl, rd)
                 out.append(Dispatch(int(cls), chunk, wc, on_cp, pre, dec,
-                                    deadline=dl))
+                                    split=split, deadline=dl))
         # the SLO plane only engages when a dispatch carries a deadline or
         # an engine is degraded: a best-effort steady-state tick must stay
         # O(classes + budget), so the propagation (memoized per plan entry)
@@ -669,7 +746,8 @@ class Router:
                 g = request_graph(n, src, dst, data)
                 res, _, _ = self.plancache.plan(
                     g, comp, self._m_snapshot, slot="router-hedge",
-                    classes=[wc for wc, _ in self.last_groups], store=False)
+                    classes=[wc for wc, _ in self.last_groups], store=False,
+                    planner=self.planner)
                 alt = res.assignment.get(d.node_decode,
                                          res.assignment.get(d.node_prefill))
                 if alt is not None and int(alt) in live:

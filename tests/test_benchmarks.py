@@ -146,10 +146,11 @@ def test_serve_router_bench_emits_gated_rows():
     # steady-state rows at both resident scales (flatness asserted in-bench)
     assert {r["graph"] for r in rows
             if r["impl"] == "jax_csr_router_steady"} == {"res1x", "res8x"}
-    # the classic-HEFT context row stays OUTSIDE the gate prefix and is
-    # flagged identity-unchecked (different algorithm, no bit contract)
+    # the classic-HEFT context row stays OUTSIDE the gate prefix but is
+    # registry-checked: its planner name rides in the row metadata
     assert context and all(r["impl"] == "heft_router"
-                           and r.get("identity_checked") is False
+                           and r.get("planner") == "heft"
+                           and "identity_checked" not in r
                            for r in context)
     traj = {"schema": 1, "scale": 0.02, "rows": rows}
     assert check(traj, traj) == []       # matched by the default gate impl
